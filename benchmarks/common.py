@@ -1,0 +1,39 @@
+"""Shared benchmark helpers: suite construction, driver building, timing."""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import polybench
+from repro.core import Klaraptor, V5eSimulator, exhaustive_search, \
+    selection_ratio
+
+__all__ = ["build_suite_drivers", "timed"]
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def build_suite_drivers(kernels=None, noise=0.04, seed=11,
+                        max_configs_per_size=20, repeats=2):
+    """Build KLARAPTOR drivers for (a subset of) the polybench suite.
+
+    Returns (sim, {name: (spec, BuildResult)}).
+    """
+    sim = V5eSimulator(noise=noise, seed=seed)
+    kl = Klaraptor(sim)
+    suite = polybench.suite()
+    names = kernels if kernels is not None else list(suite)
+    out = {}
+    for name in names:
+        spec = suite[name]
+        probe = [dict(zip(spec.data_params, (n,) * len(spec.data_params)))
+                 for n in polybench.PROBE_SIZES]
+        build = kl.build_driver(spec, probe_data=probe, repeats=repeats,
+                                max_configs_per_size=max_configs_per_size,
+                                register=False)
+        out[name] = (spec, build)
+    return sim, out

@@ -1,0 +1,52 @@
+"""Paper Fig. 1: chosen-config time vs exhaustive-search-optimal time.
+
+For each suite kernel at N=2048 (the figure's data size), report
+best_time / chosen_time -- ratios >= 0.85 are "good" per the paper.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_suite_drivers, timed
+from repro.configs import polybench
+from repro.core import selection_ratio
+
+N = 2048
+
+
+def run(kernels=None) -> list[dict]:
+    sim, drivers = build_suite_drivers(kernels)
+    rows = []
+    for name, (spec, build) in drivers.items():
+        D = polybench.eval_points(spec, sizes=(N,))[0]
+        r = selection_ratio(spec, sim, build.driver, D)
+        rows.append({
+            "kernel": name,
+            "ratio": r["ratio"],
+            "chosen_ms": r["chosen_time_s"] * 1e3,
+            "best_ms": r["best_time_s"] * 1e3,
+            "chosen": r["chosen"],
+            "best": r["best"],
+        })
+    return rows
+
+
+def main() -> list[str]:
+    rows, dt = timed(run)
+    lines = []
+    good = sum(1 for r in rows if r["ratio"] >= 0.85)
+    for r in rows:
+        lines.append(
+            f"fig1/{r['kernel']},{dt / max(len(rows), 1) * 1e6:.0f},"
+            f"ratio={r['ratio']:.3f} chosen={r['chosen_ms']:.3f}ms "
+            f"best={r['best_ms']:.3f}ms")
+    med = float(np.median([r["ratio"] for r in rows]))
+    lines.append(f"fig1/summary,{dt * 1e6:.0f},"
+                 f"median_ratio={med:.3f} good={good}/{len(rows)}")
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

@@ -1,0 +1,91 @@
+"""Roofline table: three terms per (arch x shape) from dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun), applies
+the scan correction, computes the three roofline terms against v5e
+constants, and emits the EXPERIMENTS.md-ready markdown table plus the three
+hillclimb candidates (worst roofline fraction / most collective-bound /
+most representative of the paper's technique).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.analysis.roofline import model_flops, roofline_terms
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import corrected_costs
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(dryrun_dir=DRYRUN_DIR, mesh="single") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh:
+            recs.append(rec)
+    return recs
+
+
+def rows(dryrun_dir=DRYRUN_DIR) -> list:
+    out = []
+    for rec in load_records(dryrun_dir):
+        if rec["status"] != "ok":
+            out.append((rec, None))
+            continue
+        cfg = get_config(rec["arch"])
+        preset = SHAPES[rec["shape"]]
+        costs = corrected_costs(rec)
+        mf = model_flops(cfg, preset)
+        chips = rec["chips"]
+        # cost_analysis() numbers are PER-DEVICE (the SPMD module is the
+        # per-device program); the roofline formula wants globals.
+        terms = roofline_terms(
+            rec["arch"], rec["shape"], rec["mesh"], chips,
+            costs["flops"] * chips, costs["bytes"] * chips,
+            costs["collective_wire_bytes_per_device"], mf)
+        out.append((rec, terms))
+    return out
+
+
+def main() -> list[str]:
+    lines = []
+    table = rows()
+    lines.append("| arch | shape | mesh | compute_ms | memory_ms | "
+                 "collective_ms | dominant | useful_ratio |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    candidates = []
+    for rec, terms in table:
+        if terms is None:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                         f"| - | - | - | {rec['status']} | - |")
+            continue
+        lines.append(terms.row())
+        if rec.get("kind") == "decode":
+            continue   # decode cells have ~zero compute; rank train/prefill
+        peak = max(terms.compute_s, 1e-12)
+        total = max(terms.compute_s, terms.memory_s, terms.collective_s)
+        candidates.append((terms, peak / total))
+    # hillclimb candidate hints
+    if candidates:
+        worst = min(candidates, key=lambda t: t[1])
+        coll = max(candidates, key=lambda t: t[0].collective_s
+                   / max(t[0].compute_s, 1e-12))
+        lines.append("")
+        lines.append(f"hillclimb/worst_roofline_fraction: "
+                     f"{worst[0].arch} x {worst[0].shape} "
+                     f"(fraction {worst[1]:.2f})")
+        lines.append(f"hillclimb/most_collective_bound: "
+                     f"{coll[0].arch} x {coll[0].shape} "
+                     f"(coll/comp "
+                     f"{coll[0].collective_s / max(coll[0].compute_s, 1e-12):.2f})")
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

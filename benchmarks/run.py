@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines:
+  fig1  -- chosen vs exhaustive-optimal execution time (paper Fig. 1)
+  table1-- chosen/best configs per kernel per size (paper Table I)
+  fig3  -- system time: KLARAPTOR vs exhaustive search (paper Fig. 3)
+  fig4  -- predicted-vs-actual trend alignment (paper Fig. 4)
+  roofline -- three-term roofline per dry-run cell (assignment g), if
+              dry-run artifacts exist
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig1_accuracy, fig3_system_time, fig4_trends,
+                            table1_configs)
+    for mod in (fig1_accuracy, table1_configs, fig3_system_time,
+                fig4_trends):
+        for line in mod.main():
+            print(line, flush=True)
+    try:
+        from benchmarks import roofline_table
+        for line in roofline_table.main():
+            print(line, flush=True)
+    except Exception as e:  # dry-run artifacts may not exist yet
+        print(f"roofline/skipped,0,{e!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table I: chosen vs best configuration per kernel per data size."""
+
+from __future__ import annotations
+
+from benchmarks.common import build_suite_drivers, timed
+from repro.configs import polybench
+from repro.core import selection_ratio
+
+SIZES = (1024, 2048)
+# A representative cross-family subset keeps the bench under a minute; pass
+# kernels=None for the full Table-I sweep.
+DEFAULT_KERNELS = ("gemm", "mm2_k1", "atax_k1", "atax_k2", "bicg_k1",
+                   "mvt_k1", "gesummv", "conv2d", "corr", "reduce",
+                   "gramschmidt_k1", "syrk", "fdtd_step1", "mean")
+
+
+def run(kernels=DEFAULT_KERNELS) -> list[dict]:
+    sim, drivers = build_suite_drivers(list(kernels))
+    rows = []
+    for name, (spec, build) in drivers.items():
+        for D in polybench.eval_points(spec, sizes=SIZES):
+            r = selection_ratio(spec, sim, build.driver, D)
+            n = list(D.values())[0]
+            rows.append({
+                "kernel": name, "N": n,
+                "chosen": r["chosen"], "chosen_ms": r["chosen_time_s"] * 1e3,
+                "best": r["best"], "best_ms": r["best_time_s"] * 1e3,
+                "ratio": r["ratio"],
+            })
+    return rows
+
+
+def fmt(cfg: dict) -> str:
+    return "x".join(str(v) for v in cfg.values())
+
+
+def main() -> list[str]:
+    rows, dt = timed(run)
+    lines = []
+    for r in rows:
+        lines.append(
+            f"table1/{r['kernel']}@N{r['N']},{dt / len(rows) * 1e6:.0f},"
+            f"chosen={fmt(r['chosen'])}({r['chosen_ms']:.3f}ms) "
+            f"best={fmt(r['best'])}({r['best_ms']:.3f}ms) "
+            f"ratio={r['ratio']:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

@@ -1,0 +1,42 @@
+"""The paper's evaluation: KLARAPTOR over the Polybench/GPU-analogue suite.
+
+Reproduces the Fig. 1 / Table I experiment shape: for every suite kernel,
+build a driver from small-size probes, then compare its chosen launch
+configuration against exhaustive search at large sizes.
+
+    PYTHONPATH=src python examples/polybench_suite.py [--sizes 1024 2048]
+"""
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import build_suite_drivers
+from repro.configs import polybench
+from repro.core import selection_ratio
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[1024, 2048])
+    ap.add_argument("--kernels", nargs="*", default=None)
+    args = ap.parse_args()
+
+    sim, drivers = build_suite_drivers(args.kernels)
+    ratios = []
+    print(f"{'kernel':>16} {'N':>6} {'chosen':>14} {'best':>14} {'ratio':>6}")
+    for name, (spec, build) in drivers.items():
+        for D in polybench.eval_points(spec, sizes=tuple(args.sizes)):
+            r = selection_ratio(spec, sim, build.driver, D)
+            ratios.append(r["ratio"])
+            fmt = lambda c: "x".join(str(v) for v in c.values())
+            print(f"{name:>16} {list(D.values())[0]:>6} "
+                  f"{fmt(r['chosen']):>14} {fmt(r['best']):>14} "
+                  f"{r['ratio']:>6.3f}")
+    good = sum(1 for r in ratios if r >= 0.85)
+    print(f"\nmedian ratio {np.median(ratios):.3f}; "
+          f"{good}/{len(ratios)} cells >= 0.85 ('good' per paper Fig. 1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: KLARAPTOR end to end on one kernel.
+
+Builds a driver program for the tiled-matmul Pallas kernel against the
+simulated TPU v5e (compile-time phase: probe small sizes -> SVD-fit rational
+functions -> generate driver code), then uses it at "runtime" to pick launch
+parameters for data sizes it never saw, comparing against exhaustive search.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import (Klaraptor, V5eSimulator, exhaustive_search,
+                        matmul_spec, selection_ratio)
+
+
+def main() -> None:
+    sim = V5eSimulator(noise=0.04, seed=42)
+    spec = matmul_spec()
+
+    print("== compile-time: probe + fit + codegen ==")
+    build = Klaraptor(sim).build_driver(spec, repeats=2,
+                                        max_configs_per_size=24)
+    print(build.fit_report())
+
+    print("\n== generated driver program (excerpt) ==")
+    src = build.driver.source.splitlines()
+    head = [ln for ln in src if ln.startswith("def ")][:6]
+    print("\n".join(head))
+
+    print("\n== runtime: choose launch parameters per data size ==")
+    print(f"{'N':>6} {'chosen':>18} {'t_chosen':>10} {'best':>18} "
+          f"{'t_best':>10} {'ratio':>6}")
+    for n in (1024, 2048, 4096, 8192, 16384):
+        D = {"m": n, "n": n, "k": n}
+        r = selection_ratio(spec, sim, build.driver, D)
+        fmt = lambda c: "x".join(str(v) for v in c.values())
+        print(f"{n:>6} {fmt(r['chosen']):>18} "
+              f"{r['chosen_time_s'] * 1e3:>8.3f}ms {fmt(r['best']):>18} "
+              f"{r['best_time_s'] * 1e3:>8.3f}ms {r['ratio']:>6.3f}")
+
+    print("\nratios >= 0.85 are 'good' per the paper (Fig. 1); the driver "
+          "probed only N <= 1024.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Compiled-artifact analysis: collective bytes, roofline terms."""
+
+from .hlo import CollectiveStats, collective_bytes
+from .roofline import (RooflineTerms, model_flops, roofline_terms,
+                       scan_corrected)
+
+__all__ = ["CollectiveStats", "collective_bytes", "RooflineTerms",
+           "model_flops", "roofline_terms", "scan_corrected"]

@@ -1,0 +1,100 @@
+"""HLO analysis: collective-byte accounting from compiled modules.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+optimized HLO text (post-SPMD-partitioning: shapes are per-device) and sum
+operand sizes of every collective op, with per-op wire multipliers for the
+ring algorithms v5e uses:
+
+    all-reduce          2x operand   (reduce-scatter + all-gather phases)
+    all-gather          1x result    (each chip receives ~result bytes)
+    reduce-scatter      1x operand
+    all-to-all          1x operand
+    collective-permute  1x operand
+
+Numbers returned are *per-device wire bytes*; multiply by chip count for the
+global figure the roofline formula expects.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["CollectiveStats", "collective_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+_OP_RE = re.compile(
+    r"=\s+(?:\(?[a-z0-9]+\[[0-9,]*\][^)]*\)?\s+)?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,     # applied to result bytes
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * b
+
+
+@dataclass
+class CollectiveStats:
+    per_op_bytes: dict = field(default_factory=dict)   # op -> wire bytes
+    per_op_count: dict = field(default_factory=dict)
+    total_wire_bytes: float = 0.0                      # per-device
+
+    def add(self, op: str, wire: float) -> None:
+        self.per_op_bytes[op] = self.per_op_bytes.get(op, 0.0) + wire
+        self.per_op_count[op] = self.per_op_count.get(op, 0) + 1
+        self.total_wire_bytes += wire
+
+    def summary(self) -> str:
+        parts = [f"{op}: n={self.per_op_count[op]} "
+                 f"bytes={self.per_op_bytes[op]:.3e}"
+                 for op in sorted(self.per_op_bytes)]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device collective wire bytes from optimized HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        if line.lstrip().startswith("ROOT"):
+            pass
+        eq = line.find("=")
+        result_part = line[:m.start()] if eq < 0 else line[eq:m.start(1)]
+        operand_part = line[m.end():]
+        result_bytes = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(result_part))
+        operand_bytes = sum(_shape_bytes(d, s)
+                            for d, s in _SHAPE_RE.findall(operand_part))
+        if op == "all-gather":
+            wire = _WIRE_FACTOR[op] * result_bytes
+        else:
+            base = operand_bytes if operand_bytes else result_bytes
+            wire = _WIRE_FACTOR[op] * base
+        stats.add(op, wire)
+    return stats

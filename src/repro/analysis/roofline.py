@@ -1,0 +1,104 @@
+"""Roofline analysis: three terms per (arch x shape x mesh) from dry-run
+artifacts.
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+cost_analysis() numbers come from the compiled module.  XLA counts a while
+-loop body ONCE regardless of trip count, and the layer stack is a lax.scan
+over n_groups, so raw numbers blind-spot the loop.  We therefore compile the
+model at 1 group and 2 groups, take the difference as the per-group cost,
+and extrapolate:  total = cost(1g) + (G - 1) * (cost(2g) - cost(1g)).
+The same correction applies to collective bytes (collectives inside the
+scanned body also appear once in the HLO text).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per the assignment; the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/recompute and dispatch waste.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.device_model import HardwareParams, V5E
+
+__all__ = ["RooflineTerms", "roofline_terms", "scan_corrected",
+           "model_flops"]
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float        # global wire bytes (per-device x chips)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float            # MODEL_FLOPS / HLO_FLOPs
+    note: str = ""
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s * 1e3:.2f} | {self.memory_s * 1e3:.2f} | "
+                f"{self.collective_s * 1e3:.2f} | {self.dominant} | "
+                f"{self.useful_ratio:.2f} |")
+
+
+def scan_corrected(cost_1g: float, cost_2g: float, n_groups: int) -> float:
+    """total = base + per_group * G with base = 2*c1 - c2 (from c1 = base +
+    pg, c2 = base + 2*pg)."""
+    per_group = cost_2g - cost_1g
+    base = cost_1g - per_group
+    return base + per_group * n_groups
+
+
+def model_flops(cfg, preset, n_tokens: int | None = None) -> float:
+    """6*N*D with N = active params (excludes embedding table gathers)."""
+    from repro.models import Model
+    from repro.models.module import param_count
+
+    m = Model(cfg)
+    n_params = m.param_count()
+    # active params for MoE: replace expert count by top_k in the count
+    if cfg.n_experts and cfg.top_k:
+        dense_like = cfg.replace(n_experts=cfg.top_k)
+        n_params = Model(dense_like).param_count()
+    if n_tokens is None:
+        if preset.kind == "train":
+            n_tokens = preset.global_batch * preset.seq_len
+        elif preset.kind == "prefill":
+            n_tokens = preset.global_batch * preset.seq_len
+        else:  # decode: one token per sequence
+            n_tokens = preset.global_batch
+    factor = 6.0 if preset.kind == "train" else 2.0
+    return factor * n_params * n_tokens
+
+
+def roofline_terms(
+    arch: str, shape: str, mesh_name: str, chips: int,
+    hlo_flops: float, hlo_bytes: float, collective_wire_per_device: float,
+    mf: float, hw: HardwareParams = V5E, note: str = "",
+) -> RooflineTerms:
+    collective_global = collective_wire_per_device * chips
+    compute_s = hlo_flops / (chips * hw.peak_flops_bf16)
+    memory_s = hlo_bytes / (chips * hw.hbm_bw)
+    collective_s = collective_global / (chips * hw.ici_bw_per_link)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=collective_global,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=mf,
+        useful_ratio=(mf / hlo_flops) if hlo_flops else 0.0,
+        note=note,
+    )

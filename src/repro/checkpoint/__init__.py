@@ -1,0 +1,5 @@
+"""Checkpointing: atomic async save, keep-k GC, elastic restore."""
+
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

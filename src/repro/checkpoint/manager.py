@@ -1,0 +1,171 @@
+"""Checkpointing: atomic, async, keep-k, elastic-restore.
+
+Layout (one directory per step, written to a tmp dir then os.rename'd --
+readers never observe partial checkpoints):
+
+    <root>/step_00000420/
+        manifest.json          # tree structure, shapes, dtypes, aux state
+        arr_000.npy ...        # one file per leaf (host numpy)
+
+Async mode snapshots to host memory (jax.device_get) on the training thread
+-- a consistent cut -- then writes on a background thread so the device
+stays busy.  ``restore`` can re-shard onto a *different* mesh than the one
+that saved (elastic scaling): leaves are host arrays; the caller supplies
+target shardings (distributed/elastic.py wires this to the logical-axis
+system so restores survive changed device counts).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+@dataclass
+class CheckpointManager:
+    root: str
+    keep: int = 3
+    async_save: bool = True
+    _thread: threading.Thread | None = field(default=None, repr=False)
+    _error: list = field(default_factory=list, repr=False)
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+
+    # -- save --------------------------------------------------------------------
+    def save(self, step: int, tree: Any, aux: dict | None = None,
+             block: bool = False) -> None:
+        """Checkpoint ``tree`` at ``step``.  aux: small JSON state (data
+        iterator position, rng, etc.)."""
+        self.wait()  # one in-flight save at a time; also surfaces errors
+        paths, leaves, treedef = _flatten_with_paths(tree)
+        # Consistent host snapshot (device_get blocks until values ready).
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        payload = (step, paths, host_leaves,
+                   jax.tree_util.tree_structure(tree), aux or {})
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=payload, daemon=True)
+            self._thread.start()
+        else:
+            self._write(*payload)
+
+    def _write(self, step, paths, host_leaves, treedef, aux) -> None:
+        try:
+            final = self._step_dir(step)
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest = {"step": step, "aux": aux, "paths": paths,
+                        "dtypes": [], "shapes": []}
+            for i, arr in enumerate(host_leaves):
+                manifest["dtypes"].append(str(arr.dtype))
+                manifest["shapes"].append(list(arr.shape))
+                np.save(os.path.join(tmp, f"arr_{i:04d}.npy"),
+                        _np_safe(arr))
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)   # atomic publish
+            self._gc()
+        except Exception as e:  # surfaced on next save()/wait()
+            self._error.append(e)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise RuntimeError("async checkpoint failed") from self._error.pop()
+
+    # -- restore --------------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def restore(self, template: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, dict, int]:
+        """Load a checkpoint into ``template``'s tree structure.
+
+        ``shardings``: optional matching pytree of NamedSharding for elastic
+        restore onto the current mesh; None leaves arrays on the default
+        device.  Returns (tree, aux, step).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        t_paths, t_leaves, treedef = _flatten_with_paths(template)
+        by_path = {p: i for i, p in enumerate(manifest["paths"])}
+        out = []
+        shard_leaves = (jax.tree.leaves(shardings)
+                        if shardings is not None else [None] * len(t_leaves))
+        for p, tmpl, shard in zip(t_paths, t_leaves, shard_leaves):
+            if p not in by_path:
+                raise KeyError(f"checkpoint {d} missing leaf {p}")
+            i = by_path[p]
+            arr = np.load(os.path.join(d, f"arr_{i:04d}.npy"))
+            arr = _np_restore(arr, manifest["dtypes"][i])
+            want = jnp.dtype(tmpl.dtype)
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ValueError(
+                    f"{p}: checkpoint shape {arr.shape} != {tmpl.shape}")
+            if shard is not None:
+                out.append(jax.device_put(arr.astype(want), shard))
+            else:
+                out.append(jnp.asarray(arr, dtype=want))
+        tree = jax.tree.unflatten(treedef, out)
+        return tree, manifest["aux"], step
+
+    # -- internals ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+
+def _np_safe(arr: np.ndarray) -> np.ndarray:
+    """numpy can't save bfloat16 natively; view as uint16."""
+    if arr.dtype == jnp.bfloat16:
+        return arr.view(np.uint16)
+    return arr
+
+
+def _np_restore(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        return arr.view(jnp.bfloat16)
+    return arr

@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Each module exposes full() and smoke() ModelConfigs; ``polybench`` is the
+paper's own kernel-suite workload (not an LM).
+"""
+
+from repro.configs import (gemma2_2b, grok1_314b, internlm2_1_8b,
+                           internvl2_76b, jamba1_5_large, llama3_2_1b,
+                           mamba2_130m, polybench, qwen3_14b, qwen3_moe_235b,
+                           whisper_medium)
+from repro.configs.base import SHAPES, ShapePreset, shape_applicable
+
+_MODULES = (
+    gemma2_2b, internlm2_1_8b, llama3_2_1b, qwen3_14b, jamba1_5_large,
+    internvl2_76b, mamba2_130m, whisper_medium, qwen3_moe_235b, grok1_314b,
+)
+
+REGISTRY = {m.ARCH_ID: m for m in _MODULES}
+ARCH_IDS = tuple(REGISTRY)
+
+# Architectures whose optimizer state is stored bf16 (DESIGN.md section 4).
+BF16_OPT_STATE = {"jamba-1.5-large-398b", "qwen3-moe-235b-a22b",
+                  "grok-1-314b"}
+
+
+def get_config(arch: str, smoke: bool = False):
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(REGISTRY)}")
+    mod = REGISTRY[arch]
+    return mod.smoke() if smoke else mod.full()
+
+
+__all__ = ["REGISTRY", "ARCH_IDS", "SHAPES", "ShapePreset",
+           "shape_applicable", "get_config", "BF16_OPT_STATE", "polybench"]

@@ -1,0 +1,32 @@
+"""The paper's own evaluation workload: the Polybench/GPU-analogue kernel
+suite (Section VI, Table I) as a selectable "architecture".
+
+This config is not an LM; selecting ``--arch polybench`` in the benchmark
+harness runs the KLARAPTOR pipeline over the suite's kernel specs at the
+paper's data sizes.
+"""
+
+from repro.core.kernel_spec import polybench_suite
+
+ARCH_ID = "polybench"
+
+# Table I uses N in {256 .. 8192}; probes use small sizes only (Section III-B).
+PROBE_SIZES = (256, 512, 1024)
+EVAL_SIZES = (1024, 2048, 4096, 8192)
+
+
+def suite():
+    return polybench_suite()
+
+
+def eval_points(spec, sizes=EVAL_SIZES):
+    """Table-I style evaluation (D assignments) for one suite kernel."""
+    out = []
+    for n in sizes:
+        if set(spec.data_params) == {"m", "n", "k"}:
+            out.append({"m": n, "n": n, "k": n})
+        elif set(spec.data_params) == {"r", "c"}:
+            out.append({"r": n, "c": n})
+        else:  # pragma: no cover
+            raise ValueError(spec.data_params)
+    return out

@@ -1,0 +1,44 @@
+"""KLARAPTOR core: rational programs for dynamic launch-parameter selection.
+
+Public API re-exports.  See DESIGN.md for the paper-to-TPU mapping.
+"""
+
+from .device_model import (
+    V5E, V5P, DeviceModel, HardwareParams, KernelTraffic, ProbeRecord,
+    V5eSimulator,
+)
+from .driver import (
+    DriverProgram, choose_or_default, get_driver, register_driver, registry,
+)
+from .fitting import FitResult, fit_auto, fit_polynomial, fit_rational
+from .kernel_spec import (
+    GridAxis, KernelSpec, Operand, flash_attention_spec, matmul_spec,
+    moe_gmm_spec, polybench_suite, ssd_scan_spec,
+)
+from .occupancy import cuda_occupancy_program, tpu_pipeline_occupancy_program
+from .perf_model import LOW_LEVEL_METRICS, build_time_program
+from .polynomial import Polynomial, design_matrix, monomial_exponents
+from .rational import RationalFunction
+from .rational_program import (
+    BinOp, Ceil, Const, Expr, Fitted, Floor, Max, Min, RationalProgram,
+    Select, Var, ceil_div, const, floor_div, var,
+)
+from .tuner import BuildResult, Klaraptor, exhaustive_search, selection_ratio
+
+__all__ = [
+    "V5E", "V5P", "DeviceModel", "HardwareParams", "KernelTraffic",
+    "ProbeRecord", "V5eSimulator",
+    "DriverProgram", "choose_or_default", "get_driver", "register_driver",
+    "registry",
+    "FitResult", "fit_auto", "fit_polynomial", "fit_rational",
+    "GridAxis", "KernelSpec", "Operand", "flash_attention_spec",
+    "matmul_spec", "moe_gmm_spec", "polybench_suite", "ssd_scan_spec",
+    "cuda_occupancy_program", "tpu_pipeline_occupancy_program",
+    "LOW_LEVEL_METRICS", "build_time_program",
+    "Polynomial", "design_matrix", "monomial_exponents",
+    "RationalFunction",
+    "BinOp", "Ceil", "Const", "Expr", "Fitted", "Floor", "Max", "Min",
+    "RationalProgram", "Select", "Var", "ceil_div", "const", "floor_div",
+    "var",
+    "BuildResult", "Klaraptor", "exhaustive_search", "selection_ratio",
+]

@@ -1,0 +1,178 @@
+"""Code generation (paper Section IV, step 3).
+
+The paper converts the rational program R into C code and inserts it into the
+CUDA program so it is "called before the execution of the corresponding
+kernel".  We emit a self-contained *Python module* per kernel -- the driver
+program -- with:
+
+  * one function per fitted rational function g_i(D, P),
+  * ``estimate(**DP)``: the full piecewise rational program E(D, P),
+  * ``candidates(**D)``: the feasible configuration enumerator, generated
+    from the spec's parameter grids and its Python-syntax constraint strings
+    (mirroring the user-written configuration files of Section V-A),
+  * ``choose(**D)``: steps 4-6's runtime selection -- evaluate E over every
+    feasible P, pick the argmin with the occupancy tie-break heuristic, and
+    memoize into a decision-history table.
+
+The generated source has no imports beyond ``math`` and no dependency on this
+package: it can be dropped next to any JAX program, exactly as the paper's
+generated C driver is linked into the instrumented binary.
+"""
+
+from __future__ import annotations
+
+import textwrap
+
+from .device_model import HardwareParams, V5E
+from .kernel_spec import KernelSpec
+from .perf_model import LOW_LEVEL_METRICS
+from .rational import RationalFunction
+from .rational_program import RationalProgram
+
+__all__ = ["generate_driver_source", "compile_driver_module"]
+
+_HEADER = '''\
+"""Auto-generated KLARAPTOR driver program.
+
+kernel:  {kernel}
+device:  {device}
+This module is the rational program R of the paper: it estimates the kernel's
+execution time E(D, P) as a piecewise rational function and selects optimal
+launch parameters at runtime.  Generated code -- do not edit.
+"""
+import math
+
+KERNEL = {kernel!r}
+DEVICE = {device!r}
+VMEM_BYTES = {vmem}
+MAX_STAGES = {max_stages}
+DATA_PARAMS = {data_params!r}
+PROGRAM_PARAMS = {program_params!r}
+
+_HISTORY = {{}}  # decision history: D tuple -> chosen P tuple
+'''
+
+
+def _fn_source(name: str, rf: RationalFunction) -> str:
+    args = ", ".join(rf.var_names)
+    return (f"def {name}({args}):\n"
+            f"    return {rf.to_source()}\n")
+
+
+def generate_driver_source(
+    spec: KernelSpec,
+    program: RationalProgram,
+    fitted: dict[str, RationalFunction],
+    hw: HardwareParams = V5E,
+    max_stages: int = 3,
+) -> str:
+    parts = [_HEADER.format(
+        kernel=spec.name, device=hw.name, vmem=hw.vmem_bytes,
+        max_stages=max_stages, data_params=tuple(spec.data_params),
+        program_params=tuple(spec.program_params),
+    )]
+
+    # Fitted low-level metric subroutines (step 3-ii).
+    for metric in LOW_LEVEL_METRICS:
+        rf = fitted[metric]
+        parts.append(_fn_source(f"g_{metric}", rf))
+
+    # Symbolic skeleton pieces (step 3-i): grid steps, stage bytes, buffers.
+    all_params = list(spec.data_params) + list(spec.program_params)
+    sig = ", ".join(all_params)
+    steps_src = spec.grid_steps_expr().to_source()
+    stage_src = spec.vmem_stage_expr(hw).to_source()
+    parts.append(textwrap.dedent(f'''\
+        def grid_steps({sig}):
+            return {steps_src}
+
+        def stage_bytes({sig}):
+            return {stage_src}
+
+        def pipeline_buffers({sig}):
+            return min(math.floor(VMEM_BYTES / max(stage_bytes({sig}), 1.0)),
+                       MAX_STAGES)
+        '''))
+
+    # estimate(): the piecewise rational program E(D, P).
+    metric_calls = {}
+    for metric in LOW_LEVEL_METRICS:
+        args = ", ".join(fitted[metric].var_names)
+        metric_calls[metric] = f"g_{metric}({args})"
+    parts.append(textwrap.dedent(f'''\
+        def estimate({sig}):
+            """E(D, P): piecewise rational estimate of execution time (s)."""
+            steps = grid_steps({sig})
+            mem = {metric_calls["mem_step"]}
+            cmp = {metric_calls["cmp_step"]}
+            ovh = {metric_calls["ovh_step"]}
+            if pipeline_buffers({sig}) >= 2:
+                return steps * (max(mem, cmp) + ovh)
+            return steps * (mem + cmp + ovh)
+        '''))
+
+    # candidates(): feasible-set enumeration from the spec's constraint
+    # strings (the paper's user-provided Python-syntax config files).
+    d_sig = ", ".join(spec.data_params)
+    cand_lists = {p: spec.param_candidates.get(
+        p, tuple(2 ** i for i in range(3, 12)))
+        for p in spec.program_params}
+    constraint_src = " and ".join(f"({c})" for c in spec.constraints) or "True"
+    p_names = list(spec.program_params)
+    loops = []
+    indent = "    "
+    for i, p in enumerate(p_names):
+        loops.append(f"{indent * (i + 1)}for {p} in {cand_lists[p]!r}:")
+    body_indent = indent * (len(p_names) + 1)
+    parts.append(textwrap.dedent(f'''\
+        def candidates({d_sig}):
+            out = []
+        ''') + "\n".join(loops) + f'''
+{body_indent}if not ({constraint_src}):
+{body_indent}    continue
+{body_indent}if stage_bytes({sig}) * {spec.pipeline_buffers} > VMEM_BYTES:
+{body_indent}    continue
+{body_indent}out.append(({", ".join(p_names)},))
+    return out
+''')
+
+    # choose(): steps 4-6 with tie-break and decision history.
+    parts.append(textwrap.dedent(f'''\
+        def choose({d_sig}, margin=0.02):
+            """Select optimal launch parameters for data parameters D.
+
+            Evaluates E over every feasible configuration, keeps all configs
+            within ``margin`` of the minimum, and breaks ties by the platform
+            heuristic: highest pipeline-buffer count, then fewest grid steps
+            (secondary metric of Section IV step 5).  Memoized per D.
+            """
+            key = ({d_sig},)
+            hit = _HISTORY.get(key)
+            if hit is not None:
+                return dict(zip(PROGRAM_PARAMS, hit))
+            cands = candidates({d_sig})
+            if not cands:
+                raise ValueError("no feasible launch configuration")
+            scored = []
+            for cfg in cands:
+                {", ".join(p_names)} = cfg{"" if len(p_names) > 1 else "[0]"}
+                scored.append((estimate({sig}), cfg))
+            scored.sort(key=lambda t: t[0])
+            best_t = scored[0][0]
+            near = [c for t, c in scored if t <= best_t * (1.0 + margin)]
+            def _tiebreak(cfg):
+                {", ".join(p_names)} = cfg{"" if len(p_names) > 1 else "[0]"}
+                return (-pipeline_buffers({sig}), grid_steps({sig}))
+            near.sort(key=_tiebreak)
+            _HISTORY[key] = near[0]
+            return dict(zip(PROGRAM_PARAMS, near[0]))
+        '''))
+
+    return "\n\n".join(parts)
+
+
+def compile_driver_module(source: str) -> dict:
+    """Exec the generated driver source; returns its namespace."""
+    ns: dict = {}
+    exec(compile(source, "<klaraptor-driver>", "exec"), ns)
+    return ns

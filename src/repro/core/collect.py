@@ -1,0 +1,135 @@
+"""Data collection (paper Section IV, step 1).
+
+Select a set of probe points K inside the (D, P) space -- small data sizes
+only, so that "the compile-time analysis cannot overwhelm the compilation
+time" -- execute the kernel at each point through the opaque device oracle,
+and record the low-level metric values V.
+
+Derived per-sample targets (the L_i of the MBP-CBP skeleton):
+    mem_step = mem_time / grid_steps
+    cmp_step = compute_time / grid_steps
+    ovh_step = (total_time - skeleton(mem, cmp)) / grid_steps   (residual)
+The residual uses the *known* decision skeleton (overlap iff >= 2 buffers
+fit VMEM), so what remains for ovh_step is dispatch overhead + overlap leak
++ pipeline fill -- the "departure delay" analogue of the MWP-CWP model.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .device_model import DeviceModel, HardwareParams, V5E
+from .kernel_spec import KernelSpec
+
+__all__ = ["ProbeSample", "CollectedData", "default_probe_data", "collect"]
+
+Dims = Mapping[str, int]
+
+
+@dataclass
+class ProbeSample:
+    D: dict[str, int]
+    P: dict[str, int]
+    total_time_s: float
+    mem_step: float
+    cmp_step: float
+    ovh_step: float
+    grid_steps: int
+    vmem_stage_bytes: int
+
+
+@dataclass
+class CollectedData:
+    spec_name: str
+    samples: list[ProbeSample]
+    n_probe_executions: int
+    probe_device_seconds: float       # simulated device time spent probing
+    collect_wall_seconds: float
+
+    def matrix(self, metric: str, var_names: Sequence[str]
+               ) -> tuple[np.ndarray, np.ndarray]:
+        """Design points X over ``var_names`` and targets y for ``metric``."""
+        X = np.array(
+            [[{**s.D, **s.P}[v] for v in var_names] for s in self.samples],
+            dtype=np.float64,
+        )
+        y = np.array([getattr(s, metric) for s in self.samples],
+                     dtype=np.float64)
+        return X, y
+
+
+def default_probe_data(spec: KernelSpec,
+                       sizes: Sequence[int] = (256, 512, 1024)
+                       ) -> list[dict[str, int]]:
+    """Small-size probe grid: every data param swept over ``sizes``.
+
+    Params that look like counts (e.g. 'e' experts, 'bh' batch*heads) are
+    probed at small fixed values instead of the size sweep.
+    """
+    small_counts = {"e": (2, 4), "bh": (2, 8), "chunkflops": (1,)}
+    axes: list[tuple[int, ...]] = []
+    for d in spec.data_params:
+        axes.append(tuple(small_counts.get(d, tuple(sizes))))
+    import itertools
+
+    return [dict(zip(spec.data_params, combo))
+            for combo in itertools.product(*axes)]
+
+
+def collect(
+    spec: KernelSpec,
+    device: DeviceModel,
+    probe_data: Sequence[Dims] | None = None,
+    hw: HardwareParams = V5E,
+    repeats: int = 3,
+    max_configs_per_size: int = 32,
+    seed: int = 0,
+    max_stages: int = 3,
+) -> CollectedData:
+    t0 = time.perf_counter()
+    rng = np.random.RandomState(seed)
+    probe_data = list(probe_data) if probe_data is not None else \
+        default_probe_data(spec)
+    samples: list[ProbeSample] = []
+    n_exec = 0
+    device_seconds = 0.0
+    for D in probe_data:
+        cands = spec.candidates(D, hw, limit=max_configs_per_size)
+        for P in cands:
+            w = spec.traffic(D, P, hw)
+            tot, mem, cmp_ = [], [], []
+            for _ in range(repeats):
+                rec = device.probe(w, rng)
+                tot.append(rec.total_time_s)
+                mem.append(rec.mem_time_s)
+                cmp_.append(rec.compute_time_s)
+                n_exec += 1
+                device_seconds += rec.total_time_s
+            t_tot = float(np.median(tot))
+            t_mem = float(np.median(mem))
+            t_cmp = float(np.median(cmp_))
+            steps = max(w.grid_steps, 1)
+            buffers = min(hw.vmem_bytes // max(w.vmem_stage_bytes, 1),
+                          max_stages)
+            skeleton = max(t_mem, t_cmp) if buffers >= 2 else (t_mem + t_cmp)
+            ovh = max((t_tot - skeleton) / steps, 1e-9)
+            samples.append(ProbeSample(
+                D=dict(D), P=dict(P),
+                total_time_s=t_tot,
+                mem_step=t_mem / steps,
+                cmp_step=t_cmp / steps,
+                ovh_step=ovh,
+                grid_steps=steps,
+                vmem_stage_bytes=w.vmem_stage_bytes,
+            ))
+    return CollectedData(
+        spec_name=spec.name,
+        samples=samples,
+        n_probe_executions=n_exec,
+        probe_device_seconds=device_seconds,
+        collect_wall_seconds=time.perf_counter() - t0,
+    )

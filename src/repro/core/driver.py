@@ -1,0 +1,110 @@
+"""Driver programs: runtime side of KLARAPTOR (paper Section IV, steps 4-6).
+
+A ``DriverProgram`` wraps the generated rational-program module for one
+kernel.  It is what ``kernels/ops.py`` calls immediately before each Pallas
+launch -- the IO-builder contract of Section V-C: data parameter values in,
+six integers (grid + block) out; here, the BlockSpec tile dict out.
+
+A process-wide registry maps kernel-spec names to built drivers so that model
+code can ask for tuned launch parameters with one call.  Decisions are
+memoized both inside the generated module (its _HISTORY table) and here.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Mapping
+
+from .codegen import compile_driver_module
+from .device_model import HardwareParams, V5E
+
+__all__ = ["DriverProgram", "registry", "register_driver", "get_driver",
+           "choose_or_default"]
+
+Dims = Mapping[str, int]
+
+
+@dataclass
+class DriverProgram:
+    kernel: str
+    source: str
+    namespace: dict = field(repr=False)
+    hw: HardwareParams = V5E
+
+    @classmethod
+    def from_source(cls, kernel: str, source: str,
+                    hw: HardwareParams = V5E) -> "DriverProgram":
+        return cls(kernel=kernel, source=source,
+                   namespace=compile_driver_module(source), hw=hw)
+
+    # -- step 4: rational program evaluation ---------------------------------
+    def estimate(self, D: Dims, P: Dims) -> float:
+        return float(self.namespace["estimate"](**{**D, **P}))
+
+    def candidates(self, D: Dims) -> list[tuple[int, ...]]:
+        return self.namespace["candidates"](**D)
+
+    # -- steps 5-6: selection (memoized) --------------------------------------
+    def choose(self, D: Dims, margin: float = 0.02) -> dict[str, int]:
+        return self.namespace["choose"](**D, margin=margin)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.source)
+
+    @classmethod
+    def load(cls, kernel: str, path: str,
+             hw: HardwareParams = V5E) -> "DriverProgram":
+        with open(path) as f:
+            return cls.from_source(kernel, f.read(), hw)
+
+
+class _Registry:
+    """Process-wide driver registry consulted by kernels/ops.py."""
+
+    def __init__(self) -> None:
+        self._drivers: dict[str, DriverProgram] = {}
+        self._lock = threading.Lock()
+
+    def register(self, driver: DriverProgram) -> None:
+        with self._lock:
+            self._drivers[driver.kernel] = driver
+
+    def get(self, kernel: str) -> DriverProgram | None:
+        return self._drivers.get(kernel)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._drivers.clear()
+
+    def kernels(self) -> list[str]:
+        return sorted(self._drivers)
+
+
+registry = _Registry()
+
+
+def register_driver(driver: DriverProgram) -> None:
+    registry.register(driver)
+
+
+def get_driver(kernel: str) -> DriverProgram | None:
+    return registry.get(kernel)
+
+
+def choose_or_default(kernel: str, D: Dims,
+                      default: dict[str, int]) -> dict[str, int]:
+    """Tuned launch parameters if a driver is registered, else ``default``.
+
+    This keeps model code runnable before any tuning has happened (the
+    untuned path uses the static heuristic config, like un-instrumented CUDA
+    uses whatever the programmer hard-coded).
+    """
+    drv = registry.get(kernel)
+    if drv is None:
+        return dict(default)
+    try:
+        return drv.choose(D)
+    except ValueError:
+        return dict(default)

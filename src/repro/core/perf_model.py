@@ -1,0 +1,90 @@
+"""MBP-CBP: the TPU execution-time model as a rational program.
+
+This is the MWP-CWP adaptation (DESIGN.md section 2).  Hong & Kim's model
+splits execution into three regimes by comparing memory-warp parallelism to
+compute-warp parallelism; on a TPU TensorCore the corresponding regimes come
+from the software pipeline:
+
+  regime A (overlapped, memory-bound):   buffers >= 2 and L_mem >= L_cmp
+  regime B (overlapped, compute-bound):  buffers >= 2 and L_cmp >  L_mem
+  regime C (serialized):                 buffers  < 2  (stage too big for
+                                         double buffering -- the "insufficient
+                                         warps" analogue)
+
+The *skeleton* below (decision nodes + combination formulas) is known
+analytically, exactly as Section III-A assumes; the *process nodes* are the
+fitted rational functions:
+
+  L_mem(D, P)  -- per-grid-step DMA time        (fitted, ~ g_1)
+  L_cmp(D, P)  -- per-grid-step MXU/VPU time    (fitted, ~ g_2)
+  L_ovh(D, P)  -- per-grid-step residual overhead: dispatch cost, imperfect
+                  overlap leak, pipeline fill -- the "departure delay"
+                  analogue (fitted, ~ g_3)
+
+  E = steps * (max(L_mem, L_cmp) + L_ovh)          if buffers >= 2
+  E = steps * (L_mem + L_cmp + L_ovh)              otherwise
+
+``steps`` and ``buffers`` are symbolic rational expressions derived from the
+KernelSpec (grid extents via ceil-division; VMEM stage bytes via padded tile
+products) -- floor/ceil keep us inside the rational-program class.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .device_model import HardwareParams, V5E
+from .kernel_spec import KernelSpec
+from .rational import RationalFunction
+from .rational_program import (
+    Const, Expr, Fitted, Max, Min, RationalProgram, Select, const, floor_div,
+)
+
+__all__ = ["build_time_program", "LOW_LEVEL_METRICS"]
+
+# The three fitted low-level metrics (per grid step, seconds).
+LOW_LEVEL_METRICS = ("mem_step", "cmp_step", "ovh_step")
+
+
+def build_time_program(
+    spec: KernelSpec,
+    fitted: dict[str, RationalFunction],
+    hw: HardwareParams = V5E,
+    max_stages: int = 3,
+) -> RationalProgram:
+    """Assemble the execution-time rational program for one kernel.
+
+    ``fitted`` maps each LOW_LEVEL_METRICS name to its rational function
+    g_i(D, P) determined by core/fitting.py from probe data.
+    """
+    missing = set(LOW_LEVEL_METRICS) - set(fitted)
+    if missing:
+        raise ValueError(f"missing fitted metrics {missing} for {spec.name}")
+
+    steps = spec.grid_steps_expr()
+    stage = spec.vmem_stage_expr(hw)
+    buffers = Min(floor_div(Const(float(hw.vmem_bytes)), Max(stage, const(1.0))),
+                  const(float(max_stages)))
+
+    L_mem = Fitted("mem_step", fitted["mem_step"])
+    L_cmp = Fitted("cmp_step", fitted["cmp_step"])
+    L_ovh = Fitted("ovh_step", fitted["ovh_step"])
+
+    overlapped = steps * (Max(L_mem, L_cmp) + L_ovh)
+    serialized = steps * (L_mem + L_cmp + L_ovh)
+    E: Expr = Select(buffers >= const(2.0), overlapped, serialized)
+
+    return RationalProgram(
+        name=f"time_{spec.name}",
+        inputs=tuple(spec.data_params) + tuple(spec.program_params),
+        outputs={
+            "E": E,
+            "steps": steps,
+            "stage_bytes": stage,
+            "buffers": buffers,
+            "mem_step": L_mem,
+            "cmp_step": L_cmp,
+            "ovh_step": L_ovh,
+        },
+        primary="E",
+    )

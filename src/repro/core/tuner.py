@@ -1,0 +1,152 @@
+"""KLARAPTOR facade: build drivers (compile time) and evaluate them.
+
+``Klaraptor.build_driver`` runs the three compile-time steps of Section IV
+(collect -> fit -> codegen) for one kernel spec against a device oracle and
+returns a ready ``DriverProgram``.
+
+``exhaustive_search`` is the paper's comparison baseline (Table I "Best
+Config." column): probe *every* feasible configuration at the actual data
+size and take the argmin of true execution time.  ``selection_ratio`` scores
+a driver the way Fig. 1 does: best_time / chosen_time (>= 0.85 is "good").
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .codegen import generate_driver_source
+from .collect import CollectedData, collect, default_probe_data
+from .device_model import DeviceModel, HardwareParams, V5E, V5eSimulator
+from .driver import DriverProgram, register_driver
+from .fitting import FitResult, fit_auto
+from .kernel_spec import KernelSpec
+from .perf_model import LOW_LEVEL_METRICS, build_time_program
+
+__all__ = ["BuildResult", "Klaraptor", "exhaustive_search", "selection_ratio"]
+
+Dims = Mapping[str, int]
+
+
+@dataclass
+class BuildResult:
+    driver: DriverProgram
+    fits: dict[str, FitResult]
+    collected: CollectedData
+    build_wall_seconds: float
+    probe_device_seconds: float
+
+    def fit_report(self) -> str:
+        lines = [f"driver build for {self.driver.kernel}:"]
+        for m, f in self.fits.items():
+            lines.append(
+                f"  {m}: deg(num)={f.num_bounds} deg(den)={f.den_bounds} "
+                f"params={f.n_params} rel_err={f.rel_error:.3f} "
+                f"cv_err={f.cv_error:.3f}")
+        lines.append(
+            f"  probes={self.collected.n_probe_executions} "
+            f"device_s={self.probe_device_seconds:.4f} "
+            f"wall_s={self.build_wall_seconds:.2f}")
+        return "\n".join(lines)
+
+
+class Klaraptor:
+    """The tool: compile-time driver construction + runtime selection."""
+
+    def __init__(self, device: DeviceModel | None = None,
+                 hw: HardwareParams = V5E):
+        self.device = device or V5eSimulator(hw)
+        self.hw = hw
+
+    def build_driver(
+        self,
+        spec: KernelSpec,
+        probe_data: Sequence[Dims] | None = None,
+        repeats: int = 3,
+        max_configs_per_size: int = 32,
+        seed: int = 0,
+        register: bool = True,
+        max_num_degree: int = 2,
+        max_den_degree: int = 2,
+    ) -> BuildResult:
+        t0 = time.perf_counter()
+        data = collect(
+            spec, self.device,
+            probe_data=probe_data, hw=self.hw, repeats=repeats,
+            max_configs_per_size=max_configs_per_size, seed=seed,
+        )
+        fits: dict[str, FitResult] = {}
+        for metric in LOW_LEVEL_METRICS:
+            vars_ = spec.metric_fit_vars(metric)
+            X, y = data.matrix(metric, vars_)
+            fits[metric] = fit_auto(
+                X, y, vars_,
+                max_num_degree=max_num_degree,
+                max_den_degree=max_den_degree,
+            )
+        program = build_time_program(
+            spec, {m: f.function for m, f in fits.items()}, self.hw)
+        source = generate_driver_source(
+            spec, program, {m: f.function for m, f in fits.items()}, self.hw)
+        driver = DriverProgram.from_source(spec.name, source, self.hw)
+        if register:
+            register_driver(driver)
+        return BuildResult(
+            driver=driver,
+            fits=fits,
+            collected=data,
+            build_wall_seconds=time.perf_counter() - t0,
+            probe_device_seconds=data.probe_device_seconds,
+        )
+
+
+def exhaustive_search(
+    spec: KernelSpec,
+    device: V5eSimulator,
+    D: Dims,
+    hw: HardwareParams = V5E,
+) -> tuple[dict[str, int], float, int, float]:
+    """Ground-truth argmin over every feasible config at data size D.
+
+    Returns (best_P, best_time, n_evaluations, total_device_seconds).
+    total_device_seconds is what an actual exhaustive search would spend
+    running the kernel -- the Fig. 3 cost of the baseline.
+    """
+    best_P: dict[str, int] | None = None
+    best_t = float("inf")
+    total = 0.0
+    cands = spec.candidates(D, hw)
+    for P in cands:
+        t = device.true_time(spec.traffic(D, P, hw))
+        total += t
+        if t < best_t:
+            best_t, best_P = t, dict(P)
+    if best_P is None:
+        raise ValueError(f"no feasible configuration for {spec.name} at {D}")
+    return best_P, best_t, len(cands), total
+
+
+def selection_ratio(
+    spec: KernelSpec,
+    device: V5eSimulator,
+    driver: DriverProgram,
+    D: Dims,
+    hw: HardwareParams = V5E,
+) -> dict:
+    """Fig. 1 metric: best_time / chosen_time at data size D (1.0 = optimal)."""
+    chosen = driver.choose(D)
+    t_chosen = device.true_time(spec.traffic(D, chosen, hw))
+    best_P, t_best, n, _ = exhaustive_search(spec, device, D, hw)
+    return {
+        "kernel": spec.name,
+        "D": dict(D),
+        "chosen": chosen,
+        "chosen_time_s": t_chosen,
+        "best": best_P,
+        "best_time_s": t_best,
+        "ratio": t_best / max(t_chosen, 1e-300),
+        "n_configs": n,
+    }

@@ -1,0 +1,16 @@
+"""Distribution: sharding rules, collectives, PP, fault tolerance, elastic."""
+
+from .collectives import compressed_pmean, hierarchical_pmean
+from .elastic import elastic_restore, shardings_for_specs
+from .fault_tolerance import (FaultToleranceError, StragglerMonitor, Watchdog,
+                              retry_loop)
+from .pipeline_parallel import bubble_fraction, gpipe_forward
+from .sharding import Sharder, decode_rules, train_rules
+
+__all__ = [
+    "compressed_pmean", "hierarchical_pmean",
+    "elastic_restore", "shardings_for_specs",
+    "FaultToleranceError", "StragglerMonitor", "Watchdog", "retry_loop",
+    "bubble_fraction", "gpipe_forward",
+    "Sharder", "decode_rules", "train_rules",
+]

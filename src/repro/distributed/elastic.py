@@ -1,0 +1,34 @@
+"""Elastic scaling: restore checkpoints across changed meshes.
+
+Checkpoints store host arrays + the model's *logical* axes (via ParamSpec);
+a restore target is whatever mesh the relaunched job has.  Because shardings
+are re-derived from logical axes on the new mesh (Sharder.param_sharding),
+the same checkpoint restores onto 8, 256 or 512 devices unchanged -- the
+divisibility fallback in Sharder covers shrunken axes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.module import ParamSpec, spec_tree_map
+from repro.distributed.sharding import Sharder
+
+__all__ = ["shardings_for_specs", "elastic_restore"]
+
+
+def shardings_for_specs(specs, sharder: Sharder):
+    """NamedSharding pytree for a ParamSpec pytree on the sharder's mesh."""
+    return spec_tree_map(sharder.param_sharding, specs)
+
+
+def elastic_restore(manager, specs, sharder: Sharder, template,
+                    step: int | None = None):
+    """Restore ``template``-shaped state re-sharded for ``sharder``'s mesh.
+
+    ``specs`` must mirror ``template``'s tree (ParamSpec leaves) -- for
+    optimizer state, map the param specs through the state structure first.
+    """
+    shardings = shardings_for_specs(specs, sharder) \
+        if sharder.mesh is not None else None
+    return manager.restore(template, step=step, shardings=shardings)

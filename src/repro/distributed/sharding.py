@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules: DP / FSDP / TP / EP / SP on named meshes.
+
+Parameters and activations carry *logical* axis names ("embed", "heads",
+"vocab", "batch", ...).  A ``Sharder`` maps those names onto mesh axes via a
+rules table, checking divisibility: a dimension that does not divide by its
+mesh axes is replicated instead (recorded in ``dropped``), which keeps every
+assigned architecture lowerable on the production mesh without per-arch
+special cases (e.g. 8-head gemma2 attention on a 16-way model axis).
+
+Rule presets:
+  * ``train_rules``  -- DP over ("pod","data") batch, TP over "model"
+    (heads / mlp / experts / vocab), optional FSDP: "embed" over "data".
+  * ``decode_rules`` -- DP over batch, TP over "model"; the KV cache's
+    sequence axis may additionally shard over spare axes for the
+    long-context shapes (cache_seq).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.module import ParamSpec
+
+__all__ = ["Sharder", "train_rules", "decode_rules"]
+
+AxisAssign = str | tuple[str, ...] | None
+
+
+def _axes_size(mesh: Mesh, assign: AxisAssign) -> int:
+    if assign is None:
+        return 1
+    if isinstance(assign, str):
+        assign = (assign,)
+    n = 1
+    for a in assign:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclass
+class Sharder:
+    """Maps logical axis names to mesh axes; None mesh = single-device noop."""
+
+    mesh: Mesh | None
+    rules: dict[str, AxisAssign] = field(default_factory=dict)
+    dropped: list[tuple[str, str, int]] = field(default_factory=list)
+
+    def _assign(self, dim: int, name: str | None, taken: set[str]
+                ) -> AxisAssign:
+        if name is None or self.mesh is None:
+            return None
+        assign = self.rules.get(name)
+        if assign is None:
+            return None
+        axes = (assign,) if isinstance(assign, str) else tuple(assign)
+        axes = tuple(a for a in axes if a in self.mesh.shape and a not in taken)
+        if not axes:
+            return None
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        if dim % size != 0:
+            self.dropped.append((name, "x".join(axes), dim))
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def pspec(self, shape: Sequence[int],
+              axes: Sequence[str | None]) -> P:
+        taken: set[str] = set()
+        parts: list[AxisAssign] = []
+        for dim, name in zip(shape, axes):
+            a = self._assign(dim, name, taken)
+            if a is not None:
+                taken.update((a,) if isinstance(a, str) else a)
+            parts.append(a)
+        return P(*parts)
+
+    def named(self, shape: Sequence[int],
+              axes: Sequence[str | None]) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(shape, axes))
+
+    def param_sharding(self, spec: ParamSpec) -> NamedSharding | None:
+        axes = spec.axes if spec.axes else tuple(None for _ in spec.shape)
+        return self.named(spec.shape, axes)
+
+    def act(self, x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+        """Apply a with_sharding_constraint from logical activation axes."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.pspec(x.shape, axes)))
+
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return _axes_size(self.mesh, self.rules.get("batch"))
+
+
+def train_rules(fsdp: bool = True) -> dict[str, AxisAssign]:
+    """DP + TP (+ optional FSDP over the data axis for params)."""
+    return {
+        # activations
+        "batch": ("pod", "data"),
+        # Sequence parallelism: the residual stream is seq-sharded over the
+        # model axis at layer-group boundaries, so the lax.scan carry the
+        # backward saves per group costs 1/model of the naive layout.  XLA
+        # inserts the all-gather(seq) -> TP compute -> reduce-scatter(seq)
+        # pattern from the per-layer head/mlp constraints (Megatron-SP).
+        "act_seq": "model",
+        "act_embed": None,
+        "act_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "moe_groups": ("pod", "data"),
+        # token-side dispatch tensors (G, g*k, d): gather/scatter act on
+        # rows, so the d column dim shards freely over "model" -- without it
+        # every dispatch buffer replicates across the model axis.
+        "moe_token_d": "model",
+        # parameters
+        "embed": "data" if fsdp else None,     # FSDP shard dim
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "vocab": "model",
+        "mamba_inner": "model",
+        "ssm_state": None,
+        "conv_k": None,
+        "layers": None,
+        # SSD runs on (B*Hm, ...) flattened batch*heads tensors; shard that
+        # combined dim over every mesh axis so the (nc, L, L) intra-chunk
+        # score tensors never replicate (they dominate hybrid-arch memory).
+        "mamba_bh": ("pod", "data", "model"),
+    }
+
+
+def decode_rules(cache_seq_mode: str = "heads") -> dict[str, AxisAssign]:
+    """Serving: DP over request batch, TP over model.
+
+    ``cache_seq_mode`` selects what the "model" axis shards in the KV cache:
+      * "heads": kv heads over model (best when kv_heads % model == 0),
+      * "seq":   cache sequence over model (archs with few kv heads --
+                 avoids replicating the cache 16x),
+      * "long":  batch=1 long-context: cache sequence over (data, model),
+                 batch axes released.
+    """
+    rules = train_rules(fsdp=False)
+    rules.update({
+        "cache_batch": ("pod", "data"),
+        "cache_seq": None,
+        "cache_heads": "model",
+        "mamba_heads": "model",
+    })
+    if cache_seq_mode == "seq":
+        rules["cache_seq"] = "model"
+        rules["cache_heads"] = None
+    elif cache_seq_mode == "long":
+        rules["cache_seq"] = ("data", "model")
+        rules["cache_heads"] = None
+        rules["batch"] = None
+        rules["cache_batch"] = None
+    return rules

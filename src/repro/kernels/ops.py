@@ -1,0 +1,128 @@
+"""Tuned kernel dispatch -- the runtime integration point of KLARAPTOR.
+
+Each op consults the driver-program registry *immediately before launch*
+(paper Section V-C: one IO call per kernel call, data parameters in, launch
+parameters out), then invokes the Pallas kernel with the chosen BlockSpec
+tiles.  With no driver registered (or on the CPU/dry-run path) the op falls
+back to the static heuristic defaults or the pure-jnp reference.
+
+Because JAX shapes are static at trace time, the "launch" moment is trace
+time: one decision per distinct shape, memoized in the driver's history
+table, re-used by every execution of the compiled program -- the natural TPU
+analogue of the paper's per-invocation decision with its runtime history.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.driver import choose_or_default
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .matmul import matmul_pallas
+from .moe_gmm import moe_gmm_pallas
+from .ssd_scan import ssd_scan_pallas
+
+__all__ = ["matmul", "flash_attention", "moe_gmm", "ssd_scan"]
+
+# Static heuristic defaults (the "multiple of 32"-style baseline the paper
+# contrasts with -- what a programmer would hard-code).
+MATMUL_DEFAULT = {"bm": 128, "bn": 512, "bk": 512}
+FLASH_DEFAULT = {"bq": 512, "bkv": 512}
+GMM_DEFAULT = {"bg": 128, "bn": 512, "bk": 512}
+SSD_DEFAULT = {"chunk": 256}
+
+
+def _fit_tile(size: int, tile: int, align: int) -> int:
+    """Largest divisor of ``size`` that is <= tile and a multiple of
+    ``align`` -- keeps tuned tiles valid for shapes the tuner never saw."""
+    tile = min(tile, size)
+    t = (tile // align) * align
+    while t > align and size % t:
+        t -= align
+    if t >= align and size % t == 0:
+        return t
+    return size  # degenerate: single block
+
+
+def matmul(x: jax.Array, y: jax.Array, *, use_pallas: bool = False,
+           interpret: bool = True, out_dtype=None) -> jax.Array:
+    """Tuned matmul over the last two dims; leading dims are batched."""
+    if not use_pallas:
+        return ref.matmul_ref(x, y, out_dtype)
+    m, k = x.shape[-2], x.shape[-1]
+    n = y.shape[-1]
+    key = "matmul_b16" if x.dtype == jnp.bfloat16 else "matmul_b32"
+    cfg = choose_or_default(key, {"m": m, "n": n, "k": k}, MATMUL_DEFAULT)
+    bm = _fit_tile(m, cfg["bm"], 8)
+    bn = _fit_tile(n, cfg["bn"], 128)
+    bk = _fit_tile(k, cfg["bk"], 128)
+    if x.ndim == 2:
+        return matmul_pallas(x, y, bm=bm, bn=bn, bk=bk, interpret=interpret,
+                             out_dtype=out_dtype)
+    lead = x.shape[:-2]
+    xf = x.reshape((-1,) + x.shape[-2:])
+    out = jax.vmap(
+        lambda a: matmul_pallas(a, y, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret, out_dtype=out_dtype)
+    )(xf)
+    return out.reshape(lead + out.shape[-2:])
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    num_q_heads: int, num_kv_heads: int,
+    causal: bool = True, window: int | None = None,
+    softcap: float | None = None, scale: float | None = None,
+    use_pallas: bool = False, interpret: bool = True,
+    q_chunk: int | None = None,
+) -> jax.Array:
+    """(b*hq, sq, d) x (b*hkv, skv, d)^2 -> (b*hq, sq, d), tuned tiles."""
+    if not use_pallas:
+        return ref.flash_attention_ref(
+            q, k, v, num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
+            causal=causal, window=window, softcap=softcap, scale=scale,
+            q_chunk=q_chunk)
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    key = f"flash_attn_d{d}" + ("_causal" if causal else "")
+    cfg = choose_or_default(key, {"bh": bh, "sq": sq, "skv": skv},
+                            FLASH_DEFAULT)
+    bq = _fit_tile(sq, cfg["bq"], 8)
+    bkv = _fit_tile(skv, cfg["bkv"], 128)
+    return flash_attention_pallas(
+        q, k, v, num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
+        bq=bq, bkv=bkv, causal=causal, window=window, softcap=softcap,
+        scale=scale, interpret=interpret)
+
+
+def moe_gmm(x: jax.Array, w: jax.Array, *, use_pallas: bool = False,
+            interpret: bool = True) -> jax.Array:
+    """(e, g, k) @ (e, k, n) -> (e, g, n), tuned tiles."""
+    if not use_pallas:
+        return ref.moe_gmm_ref(x, w)
+    e, g, k = x.shape
+    n = w.shape[-1]
+    cfg = choose_or_default("moe_gmm_b16", {"e": e, "g": g, "k": k, "n": n},
+                            GMM_DEFAULT)
+    bg = _fit_tile(g, cfg["bg"], 8)
+    bn = _fit_tile(n, cfg["bn"], 128)
+    bk = _fit_tile(k, cfg["bk"], 128)
+    return moe_gmm_pallas(x, w, bg=bg, bn=bn, bk=bk, interpret=interpret)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+             A: jax.Array, *, use_pallas: bool = False,
+             interpret: bool = True) -> jax.Array:
+    """Mamba-2 SSD scan with tuned chunk length."""
+    if not use_pallas:
+        return ref.ssd_scan_ref(x, dt, B, C, A)
+    bh, s, dh = x.shape
+    n = B.shape[-1]
+    cfg = choose_or_default(
+        f"ssd_scan_h{dh}_n{n}", {"bh": bh, "s": s, "chunkflops": 1},
+        SSD_DEFAULT)
+    chunk = _fit_tile(s, cfg["chunk"], 128) if s >= 128 else s
+    return ssd_scan_pallas(x, dt, B, C, A, chunk=chunk, interpret=interpret)

@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+These are also the compute paths the multi-pod dry-run lowers (DESIGN.md
+section 6.3): Pallas has no CPU backend, so distribution analysis compiles
+these reference implementations while kernel correctness is established
+separately in interpret mode against them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "flash_attention_ref", "moe_gmm_ref", "ssd_scan_ref"]
+
+
+def matmul_ref(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(
+        x, y, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def _attn_block(qf, kf, vf, scale, softcap, causal, window, q_off,
+                k_off=0):
+    """Attention for one query chunk, GQA-aware.
+
+    qf (b, kv, group, cq, d); kf/vf (b, kv, ckv, d).  K/V stay at kv heads
+    -- materializing the repeat to all q heads would multiply the (already
+    sequence-gathered) K/V buffers by the GQA group factor.
+    """
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    cq, ckv = qf.shape[3], kf.shape[2]
+    qpos = (q_off + jnp.arange(cq))[:, None]
+    kpos = (k_off + jnp.arange(ckv))[None, :]
+    mask = jnp.ones((cq, ckv), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    any_visible = jnp.any(mask, axis=-1)[None, None, None, :, None]
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(vf.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    return jnp.where(any_visible, out, 0.0)
+
+
+def flash_attention_ref(
+    q: jax.Array,          # (b * hq, sq, d)
+    k: jax.Array,          # (b * hkv, skv, d)
+    v: jax.Array,
+    *,
+    num_q_heads: int,
+    num_kv_heads: int,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_chunk: int | None = None,
+) -> jax.Array:
+    """XLA attention oracle.
+
+    ``q_chunk=None`` materializes the full (b, h, sq, skv) score tensor --
+    the naive baseline.  ``q_chunk=C`` statically unrolls over query chunks
+    (flash-style streaming): live score memory drops by sq/C while every
+    FLOP stays visible to XLA's cost model (no lax.scan; see DESIGN.md).
+    """
+    bhq, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    b = bhq // num_q_heads
+    group = num_q_heads // num_kv_heads
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.reshape(b, num_kv_heads, group, sq, d)
+    kf = k.reshape(b, num_kv_heads, skv, d)
+    vf = v.reshape(b, num_kv_heads, skv, d)
+
+    if q_chunk is None or q_chunk >= sq:
+        out = _attn_block(qf, kf, vf, scale, softcap, causal, window, 0)
+    else:
+        outs = []
+        for lo in range(0, sq, q_chunk):   # last chunk may be short
+            hi = min(lo + q_chunk, sq)
+            # causal/windowed chunks only touch the kv they can see --
+            # the flops saving a flash kernel gets, in static-shape form.
+            if causal and sq == skv:
+                k_lo = 0 if window is None else max(0, lo - window + 1)
+                k_lo = (k_lo // 128) * 128      # keep lane-aligned starts
+                k_hi = hi
+            else:
+                k_lo, k_hi = 0, skv
+            outs.append(_attn_block(
+                qf[:, :, :, lo:hi], kf[:, :, k_lo:k_hi],
+                vf[:, :, k_lo:k_hi],
+                scale, softcap, causal, window, lo, k_off=k_lo))
+        out = jnp.concatenate(outs, axis=3)
+    return out.reshape(bhq, sq, d).astype(q.dtype)
+
+
+def moe_gmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    # (e, g, k) @ (e, k, n) -> (e, g, n)
+    return jax.lax.dot_general(
+        x, w, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,      # (bh, s, dh)
+    dt: jax.Array,     # (bh, s)
+    B: jax.Array,      # (bh, s, n)
+    C: jax.Array,      # (bh, s, n)
+    A: jax.Array,      # (bh,)
+) -> jax.Array:
+    """Naive per-step recurrence (lax.scan over time): the ground truth."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf, Af = B.astype(jnp.float32), C.astype(jnp.float32), A.astype(
+        jnp.float32)
+    bh, s, dh = x.shape
+    n = B.shape[-1]
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs           # (bh,dh), (bh,), (bh,n), (bh,n)
+        decay = jnp.exp(Af * dtt)[:, None, None]            # (bh,1,1)
+        h = decay * h + dtt[:, None, None] * (
+            bt[:, :, None] * xt[:, None, :])                # (bh,n,dh)
+        y = jnp.einsum("bn,bnd->bd", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((bh, n, dh), dtype=jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)),
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

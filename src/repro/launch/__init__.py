@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, dry-run, training, serving."""
+
+from .mesh import make_mesh, make_production_mesh, mesh_chips
+
+__all__ = ["make_mesh", "make_production_mesh", "mesh_chips"]

@@ -1,0 +1,46 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Refresh the differential (1-group/2-group unrolled) cost records of
+existing dry-run JSONs without re-running the full-depth compiles."""
+
+import glob
+import json
+import sys
+import traceback
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import RESULT_DIR, _compile_cell, _reduced
+from repro.launch.mesh import make_production_mesh
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else RESULT_DIR
+    mesh = make_production_mesh(multi_pod=False)
+    for path in sorted(glob.glob(os.path.join(out_dir, "*__single.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        cfg = get_config(rec["arch"])
+        preset = SHAPES[rec["shape"]]
+        try:
+            g = cfg.n_groups
+            c1 = _compile_cell(_reduced(cfg, 1), preset, mesh)
+            c2 = _compile_cell(_reduced(cfg, 2), preset, mesh)
+            rec["diff"] = {"groups": g, "g1": c1, "g2": c2}
+            if cfg.arch_kind == "encdec":
+                e2 = _compile_cell(_reduced(cfg, 1, enc_groups=2), preset,
+                                   mesh)
+                rec["diff"]["enc_groups"] = cfg.encoder_layers
+                rec["diff"]["e2"] = e2
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"[ok] {os.path.basename(path)}", flush=True)
+        except Exception as e:
+            print(f"[err] {os.path.basename(path)}: {e!r}", flush=True)
+            traceback.print_exc(limit=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""Step builders: train / prefill / decode with full sharding trees.
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input of
+an (arch, shape-preset) cell -- weak-type-correct, shardable, and never
+allocating -- and ``build_step`` packages the step function with matching
+in/out shardings so the dry-run (and the real trainer) can
+``jax.jit(...).lower(...)`` directly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import BF16_OPT_STATE
+from repro.configs.base import ShapePreset
+from repro.distributed.sharding import Sharder, decode_rules, train_rules
+from repro.models import Model, ModelConfig, abstract_params, spec_tree_map
+from repro.models.module import ParamSpec
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["StepBundle", "input_specs", "build_sharder", "build_step",
+           "make_train_step"]
+
+f32 = jnp.float32
+
+
+@dataclass
+class StepBundle:
+    kind: str
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    sharder: Sharder
+    model: Model
+
+    def lower(self):
+        # Donation: train steps update (params, opt_state) in place; decode
+        # steps update the KV/SSM cache in place.  Input/output aliasing
+        # halves the working set -- without it every decode step would hold
+        # two full caches live.
+        donate = {"train": (0, 1), "decode": (3,), "prefill": ()}[self.kind]
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=donate)
+        return jitted.lower(*self.abstract_args)
+
+
+def build_sharder(cfg: ModelConfig, preset: ShapePreset, mesh) -> Sharder:
+    if preset.kind == "decode":
+        model_size = mesh.shape.get("model", 1) if mesh is not None else 1
+        if preset.global_batch == 1:
+            mode = "long"
+        elif cfg.n_kv_heads % max(model_size, 1) == 0:
+            mode = "heads"
+        else:
+            # few kv heads (gemma2 kv=4, qwen3-moe kv=4, llama kv=8 on a
+            # 16-way model axis): shard the cache's sequence axis instead of
+            # replicating the cache across the model axis.
+            mode = "seq"
+        rules = decode_rules(cache_seq_mode=mode)
+        if cfg.d_model >= 4096:
+            # big archs: parameters FSDP-shard over "data" in serving too --
+            # replicating 314-398B bf16 params 16x would cost ~40 GiB/chip.
+            rules["embed"] = "data"
+    else:
+        # FSDP for the big archs; plain DP replication for the small ones.
+        big = cfg.d_model >= 4096
+        rules = train_rules(fsdp=big)
+    return Sharder(mesh=mesh, rules=rules)
+
+
+def input_specs(cfg: ModelConfig, preset: ShapePreset) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = preset.global_batch, preset.seq_len
+    sds = jax.ShapeDtypeStruct
+    if preset.kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S + 1), jnp.int32)}
+        if cfg.arch_kind == "vlm":
+            batch["patches"] = sds((B, cfg.num_patches, cfg.d_model),
+                                   cfg.dtype)
+        elif cfg.arch_kind == "encdec":
+            batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                  cfg.dtype)
+        return batch
+    # decode: one new token against an S-token cache
+    model = Model(cfg)
+    cache = spec_tree_map(lambda s: s.abstract(), model.cache_specs(B, S))
+    return {
+        "token": sds((B,), jnp.int32),
+        "pos": sds((B,), jnp.int32),
+        "cache": cache,
+    }
+
+
+def _batch_shardings(cfg: ModelConfig, preset: ShapePreset, sharder: Sharder,
+                     batch: dict):
+    out = {}
+    for k, v in batch.items():
+        if k == "tokens":
+            out[k] = sharder.named(v.shape, ("batch", "act_seq"))
+        elif k in ("patches", "frames"):
+            out[k] = sharder.named(v.shape, ("batch", None, "act_embed"))
+        elif k in ("token", "pos"):
+            out[k] = sharder.named(v.shape, ("cache_batch",))
+        elif k == "cache":
+            model = Model(cfg)
+            specs = model.cache_specs(preset.global_batch, preset.seq_len)
+            out[k] = spec_tree_map(sharder.param_sharding, specs)
+        else:  # pragma: no cover
+            raise KeyError(k)
+    return out
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, sharder: Sharder):
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.train_loss(p, batch, sharder)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state,
+                                             params)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def _opt_cfg_for(cfg: ModelConfig) -> AdamWConfig:
+    state_dtype = jnp.bfloat16 if cfg.name in BF16_OPT_STATE else f32
+    return AdamWConfig(state_dtype=state_dtype)
+
+
+def build_step(cfg: ModelConfig, preset: ShapePreset, mesh,
+               opt_cfg: AdamWConfig | None = None) -> StepBundle:
+    model = Model(cfg)
+    sharder = build_sharder(cfg, preset, mesh)
+    specs = model.specs()
+    params_abs = abstract_params(specs)
+    param_sh = spec_tree_map(sharder.param_sharding, specs)
+    batch = input_specs(cfg, preset)
+    batch_sh = _batch_shardings(cfg, preset, sharder, batch)
+    repl = NamedSharding(mesh, P()) if mesh is not None else None
+
+    if preset.kind == "train":
+        opt_cfg = opt_cfg or _opt_cfg_for(cfg)
+        opt_abs = {
+            "mu": spec_tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, opt_cfg.state_dtype),
+                specs),
+            "nu": spec_tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, opt_cfg.state_dtype),
+                specs),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        opt_sh = {"mu": param_sh, "nu": param_sh, "step": repl}
+        fn = make_train_step(model, opt_cfg, sharder)
+        metrics_sh = {k: repl for k in
+                      ("loss", "ce", "router_aux", "grad_norm", "lr")}
+        return StepBundle(
+            kind="train", fn=fn,
+            abstract_args=(params_abs, opt_abs, batch),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, metrics_sh),
+            sharder=sharder, model=model)
+
+    if preset.kind == "prefill":
+        def prefill_step(params, batch):
+            from repro.models import transformer as T
+            tokens = batch["tokens"][:, :-1]
+            x = T.embed_tokens(cfg, params, tokens)
+            if cfg.arch_kind == "vlm":
+                x = jnp.concatenate(
+                    [batch["patches"].astype(x.dtype), x], axis=1)
+            enc_out = None
+            if cfg.arch_kind == "encdec":
+                enc_cfg = model.encoder_cfg()
+                enc_params = {"blocks": params["encoder"]["blocks"],
+                              "final_norm": params["encoder"]["final_norm"]}
+                frames = batch["frames"].astype(x.dtype)
+                enc_out, _ = T.forward(enc_cfg, enc_params, frames, sharder,
+                                       causal=False)
+            hidden, _ = T.forward(cfg, params, x, sharder, enc_out=enc_out)
+            return T.unembed(cfg, params, hidden[:, -1])   # (B, V)
+
+        out_sh = sharder.named(
+            (preset.global_batch, cfg.padded_vocab), ("batch", None))
+        return StepBundle(
+            kind="prefill", fn=prefill_step,
+            abstract_args=(params_abs, batch),
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=out_sh,
+            sharder=sharder, model=model)
+
+    # decode
+    def serve_step(params, token, pos, cache):
+        return model.decode_step(params, token, pos, cache, sharder)
+
+    logits_sh = sharder.named(
+        (preset.global_batch, cfg.padded_vocab), ("cache_batch", None))
+    return StepBundle(
+        kind="decode", fn=serve_step,
+        abstract_args=(params_abs, batch["token"], batch["pos"],
+                       batch["cache"]),
+        in_shardings=(param_sh, batch_sh["token"], batch_sh["pos"],
+                      batch_sh["cache"]),
+        out_shardings=(logits_sh, batch_sh["cache"]),
+        sharder=sharder, model=model)

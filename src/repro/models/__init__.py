@@ -1,0 +1,12 @@
+"""Model zoo: composable pure-JAX model definitions for all assigned archs."""
+
+from .api import Model
+from .config import BlockDesc, ModelConfig
+from .module import (ParamSpec, abstract_params, init_params, param_bytes,
+                     param_count, spec_tree_map)
+
+__all__ = [
+    "Model", "BlockDesc", "ModelConfig",
+    "ParamSpec", "abstract_params", "init_params", "param_bytes",
+    "param_count", "spec_tree_map",
+]

@@ -1,0 +1,141 @@
+"""Uniform model API over all assigned architecture families.
+
+``Model(cfg)`` dispatches on cfg.arch_kind:
+  * "lm" / "ssm":  decoder-only stack (dense, MoE, hybrid, attention-free)
+  * "vlm":         decoder LM consuming stub patch embeddings as a prefix
+                   (InternVL2 backbone; the ViT frontend is a frontend stub
+                   per the assignment -- input_specs provides embeddings)
+  * "encdec":      whisper: encoder stack over stub frame embeddings +
+                   decoder stack with cross-attention
+
+Batch formats (training):
+  lm/ssm:  {"tokens": (B, S+1) int32}
+  vlm:     {"tokens": (B, S+1) int32, "patches": (B, P, d) act-dtype}
+  encdec:  {"tokens": (B, S+1) int32, "frames": (B, S_enc, d) act-dtype}
+Decode:    token (B,), pos (B,), cache pytree (see cache_specs).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import BlockDesc, ModelConfig
+from repro.models.loss import lm_loss
+from repro.models.module import (ParamSpec, abstract_params, init_params,
+                                 param_count)
+
+__all__ = ["Model"]
+
+f32 = jnp.float32
+
+
+def _sinusoid(seq: int, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=f32) / half)
+    ang = jnp.arange(seq, dtype=f32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- config helpers --------------------------------------------------------
+    def encoder_cfg(self) -> ModelConfig:
+        """Whisper encoder: bidirectional attention, gelu, no cross/moe."""
+        c = self.cfg
+        return c.replace(
+            n_layers=c.encoder_layers, causal=False, act="gelu",
+            block_pattern=(BlockDesc(kind="attn"),), n_experts=0,
+        )
+
+    # -- parameters -------------------------------------------------------------
+    def specs(self) -> dict:
+        specs = T.model_specs(self.cfg)
+        if self.cfg.arch_kind == "encdec":
+            enc = self.encoder_cfg()
+            specs["encoder"] = {
+                "blocks": T.stack_specs(enc),
+                "final_norm": ParamSpec((enc.d_model,), f32, (None,), "zeros"),
+            }
+        return specs
+
+    def init(self, key: jax.Array):
+        return init_params(self.specs(), key)
+
+    def abstract_params(self):
+        return abstract_params(self.specs())
+
+    def param_count(self) -> int:
+        return param_count(self.specs())
+
+    # -- training ---------------------------------------------------------------
+    def train_loss(self, params: dict, batch: dict, sharder
+                   ) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        x = T.embed_tokens(cfg, params, inputs)
+        x = sharder.act(x, ("batch", "act_seq", "act_embed"))
+
+        if cfg.arch_kind == "vlm":
+            patches = batch["patches"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            hidden, aux = T.forward(cfg, params, x, sharder)
+            hidden = hidden[:, patches.shape[1]:]
+        elif cfg.arch_kind == "encdec":
+            enc_cfg = self.encoder_cfg()
+            frames = batch["frames"].astype(x.dtype)
+            pos = _sinusoid(frames.shape[1], cfg.d_model).astype(x.dtype)
+            enc_x = frames + pos[None]
+            enc_params = {"blocks": params["encoder"]["blocks"],
+                          "final_norm": params["encoder"]["final_norm"]}
+            enc_out, _ = _forward_stack(enc_cfg, enc_params, enc_x, sharder,
+                                        causal=False)
+            hidden, aux = T.forward(cfg, params, x, sharder, enc_out=enc_out)
+        else:
+            hidden, aux = T.forward(cfg, params, x, sharder)
+
+        return lm_loss(cfg, params, hidden, labels, aux, sharder)
+
+    # -- serving -----------------------------------------------------------------
+    def cache_specs(self, batch: int, max_seq: int) -> dict:
+        cross = self.cfg.encoder_seq if self.cfg.arch_kind == "encdec" else 0
+        return T.init_cache_specs(self.cfg, batch, max_seq, cross_seq=cross)
+
+    def init_cache(self, batch: int, max_seq: int):
+        return init_params(self.cache_specs(batch, max_seq),
+                           jax.random.PRNGKey(0))
+
+    def decode_step(self, params: dict, token: jax.Array, pos: jax.Array,
+                    cache: dict, sharder) -> tuple[jax.Array, dict]:
+        return T.decode_step(self.cfg, params, token, pos, cache, sharder)
+
+    def prefill(self, params: dict, tokens: jax.Array, cache: dict, sharder,
+                prefix: jax.Array | None = None) -> tuple[jax.Array, dict]:
+        """Sequential prefill via decode steps (small-scale serving paths).
+
+        Production prefill uses the full-sequence forward; this helper is for
+        the serving-engine tests and examples where sequences are short.
+        """
+        B, S = tokens.shape
+
+        def step(carry, t):
+            cache, pos = carry
+            logits, cache = self.decode_step(params, t, pos, cache, sharder)
+            return (cache, pos + 1), logits
+
+        (cache, _), logits = jax.lax.scan(
+            step, (cache, jnp.zeros((B,), jnp.int32)), tokens.T)
+        return logits[-1], cache
+
+
+def _forward_stack(cfg: ModelConfig, params: dict, x: jax.Array, sharder,
+                   causal: bool):
+    """Forward over a bare {blocks, final_norm} stack (whisper encoder)."""
+    return T.forward(cfg, params, x, sharder, causal=causal)

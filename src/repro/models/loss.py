@@ -1,0 +1,76 @@
+"""Losses: chunked cross-entropy over large (sharded) vocabularies.
+
+The logits tensor (B, S, V) for a 256k vocab at trained batch sizes is tens
+of GB, so the head matmul + softmax run in *statically unrolled* sequence
+chunks: live memory is one chunk of logits, while -- unlike a lax.scan --
+every FLOP stays visible to XLA's cost model (see DESIGN.md section 6 and
+models/layers.py's scan-free SSD for the same reasoning).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["chunked_cross_entropy", "lm_loss"]
+
+f32 = jnp.float32
+
+
+def _chunk_ce(cfg: ModelConfig, head: jax.Array, x: jax.Array,
+              labels: jax.Array, mask: jax.Array, sharder
+              ) -> tuple[jax.Array, jax.Array]:
+    """CE over one chunk.  x (B,C,d), labels (B,C) -> (sum_loss, sum_count).
+
+    The hidden chunk is re-gathered over sequence (it arrives seq-sharded
+    from the SP residual stream) so the logits come out (batch, ., vocab)
+    -sharded: without this constraint XLA all-reduces full f32 logit chunks
+    (~2 GiB each) -- the collective-term bug of EXPERIMENTS.md iteration 8.
+    """
+    x = sharder.act(x, ("batch", None, None))
+    z = jnp.einsum("bcd,dv->bcv", x.astype(f32), head.astype(f32))
+    z = sharder.act(z, ("batch", None, "act_vocab"))
+    if cfg.final_softcap is not None:
+        z = cfg.final_softcap * jnp.tanh(z / cfg.final_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        col = jnp.arange(cfg.padded_vocab)
+        z = jnp.where(col < cfg.vocab_size, z, -1e30)
+    lse = jax.nn.logsumexp(z, axis=-1)                        # (B,C)
+    gold = jnp.take_along_axis(z, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def chunked_cross_entropy(cfg: ModelConfig, params: dict, hidden: jax.Array,
+                          labels: jax.Array, sharder,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token NLL with the head matmul chunked over sequence."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    B, S, _ = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), f32)
+    mask = mask.astype(f32)
+    chunk = min(cfg.logits_chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    total, count = jnp.zeros((), f32), jnp.zeros((), f32)
+    # Remat each chunk: the backward recomputes its logits/softmax instead
+    # of keeping n_chunks logit-sized buffers alive.
+    chunk_fn = jax.checkpoint(
+        lambda h, l, m: _chunk_ce(cfg, head, h, l, m, sharder),
+        policy=jax.checkpoint_policies.nothing_saveable)
+    for i in range(n_chunks):   # static unroll: exact HLO FLOPs, bounded live
+        lo = i * chunk
+        hi = min(lo + chunk, S)
+        t, c = chunk_fn(hidden[:, lo:hi], labels[:, lo:hi], mask[:, lo:hi])
+        total, count = total + t, count + c
+    return total / jnp.maximum(count, 1.0)
+
+
+def lm_loss(cfg: ModelConfig, params: dict, hidden: jax.Array,
+            labels: jax.Array, aux: jax.Array, sharder,
+            mask: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    ce = chunked_cross_entropy(cfg, params, hidden, labels, sharder, mask)
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"loss": loss, "ce": ce, "router_aux": aux}

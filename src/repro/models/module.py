@@ -1,0 +1,103 @@
+"""Minimal module system: param pytrees with logical-axis metadata.
+
+No flax/optax in this environment, so models are pure functions over plain
+dict pytrees.  Every parameter leaf is described by a ``ParamSpec`` carrying
+its shape, dtype, initializer, and *logical axes* -- names like "embed",
+"heads", "vocab" that distributed/sharding.py maps onto mesh axes.  The same
+specs drive zero-allocation abstract instantiation for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "spec_tree_map",
+           "param_count", "param_bytes"]
+
+Initializer = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+
+def _normal_init(std: float) -> Initializer:
+    def init(key, shape, dtype):
+        return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    return init
+
+
+def _zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Shape/dtype/init/logical-axes description of one parameter leaf."""
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: tuple[str | None, ...] = ()
+    init: str = "normal"          # normal | zeros | ones | scaled
+    init_scale: float | None = None
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} do not match shape {self.shape}")
+
+    def initializer(self) -> Initializer:
+        if self.init == "zeros":
+            return _zeros_init
+        if self.init == "ones":
+            return _ones_init
+        if self.init == "scaled":
+            # fan-in scaled (truncated-normal-free variant)
+            fan_in = self.shape[0] if len(self.shape) >= 2 else \
+                max(self.shape[-1], 1)
+            return _normal_init((self.init_scale or 1.0) / math.sqrt(fan_in))
+        return _normal_init(self.init_scale or 0.02)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_tree_map(fn, specs):
+    return jax.tree.map(fn, specs, is_leaf=_is_spec)
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize a spec pytree into real parameters (folded-key RNG)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        out.append(spec.initializer()(k, spec.shape, spec.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct pytree -- zero-allocation stand-in for the dry-run."""
+    return spec_tree_map(lambda s: s.abstract(), specs)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in leaves)

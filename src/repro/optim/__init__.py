@@ -1,0 +1,15 @@
+"""Optimizers, schedules, clipping, and gradient compression."""
+
+from .adamw import (AdamWConfig, adamw_init, adamw_update,
+                    clip_by_global_norm, global_norm)
+from .compression import (compress, decompress, ef_compress_tree,
+                          ef_update_tree, init_error_feedback)
+from .schedules import constant, warmup_cosine, warmup_linear
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "global_norm",
+    "compress", "decompress", "ef_compress_tree", "ef_update_tree",
+    "init_error_feedback",
+    "constant", "warmup_cosine", "warmup_linear",
+]

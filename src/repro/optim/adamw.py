@@ -1,0 +1,107 @@
+"""AdamW from scratch (no optax in this environment).
+
+State dtype is configurable: fp32 by default, bf16 (with stochastic
+rounding on the master update) for the >=235B architectures where fp32
+moments would not fit HBM (DESIGN.md section 4).  Optimizer state leaves
+inherit their parameter's sharding (FSDP rule shards them over "data"), so
+ZeRO-style state sharding falls out of the logical-axis system.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "clip_by_global_norm"]
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Any = f32
+    clip_norm: float | None = 1.0
+
+
+def adamw_init(cfg: AdamWConfig, params):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(f32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(f32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+def _stochastic_round(x: jax.Array, dtype, key: jax.Array) -> jax.Array:
+    """Unbiased rounding f32 -> bf16 (used when state_dtype is bf16)."""
+    if dtype != jnp.bfloat16:
+        return x.astype(dtype)
+    noise = jax.random.randint(key, x.shape, 0, 1 << 16, jnp.uint32)
+    bits = jax.lax.bitcast_convert_type(x.astype(f32), jnp.uint32)
+    return jax.lax.bitcast_convert_type(
+        ((bits + noise) >> 16).astype(jnp.uint16), jnp.bfloat16)
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params,
+                 sr_key: jax.Array | None = None):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else jnp.asarray(cfg.lr, f32)
+
+    metrics = {}
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gnorm
+
+    b1c = 1.0 - cfg.b1 ** step.astype(f32)
+    b2c = 1.0 - cfg.b2 ** step.astype(f32)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+
+    new_p, new_mu, new_nu = [], [], []
+    for i, (g, p, mu, nu) in enumerate(zip(flat_g, flat_p, flat_mu, flat_nu)):
+        g32 = g.astype(f32)
+        mu32 = cfg.b1 * mu.astype(f32) + (1.0 - cfg.b1) * g32
+        nu32 = cfg.b2 * nu.astype(f32) + (1.0 - cfg.b2) * g32 * g32
+        upd = (mu32 / b1c) / (jnp.sqrt(nu32 / b2c) + cfg.eps)
+        p32 = p.astype(f32) * (1.0 - lr * cfg.weight_decay) - lr * upd
+        if sr_key is not None and p.dtype == jnp.bfloat16:
+            k = jax.random.fold_in(sr_key, i)
+            new_p.append(_stochastic_round(p32, p.dtype, k))
+        else:
+            new_p.append(p32.astype(p.dtype))
+        new_mu.append(mu32.astype(cfg.state_dtype))
+        new_nu.append(nu32.astype(cfg.state_dtype))
+
+    metrics["lr"] = lr
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {"mu": jax.tree.unflatten(treedef, new_mu),
+         "nu": jax.tree.unflatten(treedef, new_nu),
+         "step": step},
+        metrics,
+    )

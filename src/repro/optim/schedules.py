@@ -1,0 +1,33 @@
+"""Learning-rate schedules (plain callables step -> lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_linear", "constant"]
+
+f32 = jnp.float32
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, f32)
+
+
+def warmup_linear(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(f32)
+        warm = peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        decay = peak + (floor - peak) * frac
+        return jnp.where(s < warmup, warm, decay)
+    return fn
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(f32)
+        warm = peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        decay = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, decay)
+    return fn

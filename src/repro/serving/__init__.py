@@ -1,0 +1,6 @@
+"""Serving: continuous-batching engine + sampling."""
+
+from .engine import Request, ServingEngine
+from .sampling import greedy, sample
+
+__all__ = ["Request", "ServingEngine", "greedy", "sample"]

@@ -1,0 +1,123 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of ``batch`` decode slots shares one jit-compiled decode step
+(so shapes never change).  Requests queue up; free slots are filled by
+prefilling the prompt token-by-token through the same decode step (adequate
+at the engine-test scale; production prefill would use the full-sequence
+forward).  Finished sequences (EOS or max_new_tokens) free their slot
+immediately -- the decode batch never drains, which is the continuous-
+batching property.
+
+Inside each decode step the KLARAPTOR drivers pick kernel launch parameters
+for the current shapes (once, then memoized) -- the serving-side face of the
+paper's "optimal values ... for each kernel launch independently".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampling import greedy, sample
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model, params, sharder, batch: int, max_seq: int,
+                 eos_id: int = 1, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.sharder = sharder
+        self.batch = batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = model.init_cache(batch, max_seq)
+        self.slot_req: list[Request | None] = [None] * batch
+        self.slot_pos = np.zeros(batch, np.int32)      # next write position
+        self.slot_last = np.zeros(batch, np.int32)     # last emitted token
+        self.slot_budget = np.zeros(batch, np.int32)
+        self.pending: list[Request] = []
+        self.finished: list[Request] = []
+
+        def step(params, token, pos, cache):
+            return model.decode_step(params, token, pos, cache, sharder)
+
+        self._step = jax.jit(step)
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.pending or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            self._fill_slots()
+            self._decode_once()
+            steps += 1
+        return self.finished
+
+    # -- internals ---------------------------------------------------------------
+    def _fill_slots(self) -> None:
+        for s in range(self.batch):
+            if self.slot_req[s] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            # prefill the prompt through the shared decode step
+            for t_idx, tok in enumerate(req.prompt[:-1]):
+                self._single(s, tok, t_idx)
+            self.slot_req[s] = req
+            self.slot_pos[s] = len(req.prompt) - 1
+            self.slot_last[s] = req.prompt[-1]
+            self.slot_budget[s] = req.max_new_tokens
+
+    def _single(self, slot: int, token: int, pos: int) -> None:
+        tok = np.array(self.slot_last, np.int32)
+        ps = np.array(self.slot_pos, np.int32)
+        tok[slot] = token
+        ps[slot] = pos
+        _, self.cache = self._step(self.params, jnp.asarray(tok),
+                                   jnp.asarray(ps), self.cache)
+
+    def _decode_once(self) -> None:
+        active = [s for s in range(self.batch) if self.slot_req[s] is not None]
+        if not active:
+            return
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(self.slot_last),
+            jnp.asarray(self.slot_pos), self.cache)
+        self.key, sub = jax.random.split(self.key)
+        temps = {r.temperature for s, r in enumerate(self.slot_req)
+                 if r is not None}
+        greedy_tok = np.asarray(greedy(logits))
+        sampled_tok = np.asarray(sample(logits, sub, temperature=max(
+            temps | {1.0})))
+        for s in active:
+            req = self.slot_req[s]
+            nxt = int(greedy_tok[s] if req.temperature <= 0.0
+                      else sampled_tok[s])
+            req.output.append(nxt)
+            self.slot_pos[s] += 1
+            self.slot_last[s] = nxt
+            self.slot_budget[s] -= 1
+            if (nxt == self.eos_id or self.slot_budget[s] <= 0
+                    or self.slot_pos[s] >= self.max_seq - 1):
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[s] = None   # slot freed: continuous batching

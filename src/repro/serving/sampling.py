@@ -1,0 +1,24 @@
+"""Token sampling for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["greedy", "sample"]
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
+           top_k: int | None = None) -> jax.Array:
+    if temperature <= 0.0:
+        return greedy(logits)
+    z = logits / temperature
+    if top_k is not None:
+        vals, _ = jax.lax.top_k(z, top_k)
+        cutoff = vals[..., -1:]
+        z = jnp.where(z < cutoff, -1e30, z)
+    return jax.random.categorical(key, z, axis=-1).astype(jnp.int32)

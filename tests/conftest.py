@@ -1,0 +1,39 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here -- smoke tests and benches must see 1 device
+(the dry-run sets its own flags in its own process).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 240) -> str:
+    """Run a python snippet in a subprocess with fake XLA devices.
+
+    Multi-device tests must not pollute this process's jax device state.
+    Raises on failure; returns stdout.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def devices8():
+    return lambda code, timeout=240: run_with_devices(code, 8, timeout)

@@ -1,0 +1,85 @@
+"""Tests: HLO collective parsing, roofline terms, scan correction."""
+
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import (model_flops, roofline_terms,
+                                     scan_corrected)
+from repro.configs import SHAPES, get_config
+
+
+class TestCollectiveParsing:
+    def test_parses_ops_and_sizes(self):
+        hlo = """
+  %ar = f32[16,1024]{1,0} all-reduce(f32[16,1024]{1,0} %x), replica_groups={}
+  %ag = bf16[64,512]{1,0} all-gather(bf16[8,512]{1,0} %y), dimensions={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(f32[64,128]{1,0} %z), dimensions={0}
+  %cp = f32[4,4]{1,0} collective-permute(f32[4,4]{1,0} %w)
+  %aa = f32[16,16]{1,0} all-to-all(f32[16,16]{1,0} %v)
+"""
+        st = collective_bytes(hlo)
+        assert st.per_op_count == {"all-reduce": 1, "all-gather": 1,
+                                   "reduce-scatter": 1,
+                                   "collective-permute": 1, "all-to-all": 1}
+        assert st.per_op_bytes["all-reduce"] == 2 * 16 * 1024 * 4
+        assert st.per_op_bytes["all-gather"] == 64 * 512 * 2
+        assert st.per_op_bytes["reduce-scatter"] == 64 * 128 * 4
+        assert st.per_op_bytes["collective-permute"] == 4 * 4 * 4
+        assert st.per_op_bytes["all-to-all"] == 16 * 16 * 4
+
+    def test_ignores_non_collectives(self):
+        hlo = "%d = f32[128,128]{1,0} dot(f32[128,64] %a, f32[64,128] %b)"
+        assert collective_bytes(hlo).total_wire_bytes == 0
+
+    def test_real_compiled_module(self):
+        import jax, jax.numpy as jnp
+        # single-device psum-free module has no collectives
+        c = jax.jit(lambda x: x @ x).lower(
+            jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+        assert collective_bytes(c.as_text()).total_wire_bytes == 0
+
+
+class TestScanCorrection:
+    def test_linear_extrapolation(self):
+        # base=10, per_group=5: c1=15, c2=20 -> G=8: 10+40=50
+        assert scan_corrected(15.0, 20.0, 8) == pytest.approx(50.0)
+
+    def test_identity_for_one_group(self):
+        assert scan_corrected(15.0, 20.0, 1) == pytest.approx(15.0)
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        t = roofline_terms(
+            "a", "s", "single", 256,
+            hlo_flops=1e15, hlo_bytes=1e12,
+            collective_wire_per_device=1e9, mf=8e14)
+        # compute = 1e15/(256*197e12) ~ 19.8us... memory = 1e12/(256*819e9)
+        assert t.compute_s == pytest.approx(1e15 / (256 * 197e12))
+        assert t.memory_s == pytest.approx(1e12 / (256 * 819e9))
+        assert t.collective_s == pytest.approx(1e9 / 50e9)
+        assert t.dominant == "collective"
+        assert t.useful_ratio == pytest.approx(0.8)
+
+    def test_model_flops_dense_vs_moe(self):
+        dense = get_config("llama3.2-1b")
+        moe = get_config("qwen3-moe-235b-a22b")
+        preset = SHAPES["train_4k"]
+        mf_dense = model_flops(dense, preset)
+        # 6 * N * tokens
+        from repro.models import Model
+        n = Model(dense).param_count()
+        assert mf_dense == pytest.approx(
+            6.0 * n * preset.global_batch * preset.seq_len)
+        # MoE counts ACTIVE params only: well below total
+        mf_moe = model_flops(moe, preset)
+        n_total = Model(moe).param_count()
+        assert mf_moe < 6.0 * n_total * preset.global_batch * preset.seq_len
+
+    def test_decode_flops_use_one_token(self):
+        cfg = get_config("llama3.2-1b")
+        mf = model_flops(cfg, SHAPES["decode_32k"])
+        from repro.models import Model
+        n = Model(cfg).param_count()
+        assert mf == pytest.approx(2.0 * n * 128)

@@ -1,0 +1,116 @@
+"""Unit tests: rational programs, occupancy flowcharts, polynomials."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (Polynomial, RationalFunction, cuda_occupancy_program,
+                        tpu_pipeline_occupancy_program)
+from repro.core.rational_program import (Ceil, Const, Floor, Max, Min, Select,
+                                         ceil_div, const, floor_div, var)
+
+
+class TestPolynomial:
+    def test_eval(self):
+        # 2 + 3*x*y + x^2 over vars (x, y)
+        p = Polynomial(("x", "y"), ((0, 0), (1, 1), (2, 0)),
+                       np.array([2.0, 3.0, 1.0]))
+        X = np.array([[1.0, 2.0], [3.0, 0.5]])
+        np.testing.assert_allclose(p(X), [2 + 6 + 1, 2 + 4.5 + 9])
+
+    def test_source_roundtrip(self):
+        p = Polynomial(("x", "y"), ((0, 0), (1, 2)), np.array([1.5, -2.0]))
+        src = p.to_source()
+        for x, y in [(1.0, 2.0), (3.0, -1.0)]:
+            assert eval(src) == pytest.approx(p(np.array([[x, y]]))[0])
+
+
+class TestRationalFunction:
+    def test_eval_and_json(self):
+        rf = RationalFunction.from_coeffs(
+            ("x",), [(0,), (1,)], np.array([1.0, 2.0]),
+            [(0,), (1,)], np.array([1.0, 0.5]))
+        X = np.array([[2.0]])
+        assert rf(X)[0] == pytest.approx((1 + 4) / (1 + 1))
+        rf2 = RationalFunction.from_json(rf.to_json())
+        assert rf2(X)[0] == pytest.approx(rf(X)[0])
+
+    def test_denominator_stability(self):
+        rf = RationalFunction.from_coeffs(
+            ("x",), [(0,)], np.array([1.0]),
+            [(0,), (1,)], np.array([-1.0, 1.0]))   # pole at x=1
+        X = np.linspace(0.5, 2.0, 10)[:, None]
+        assert not rf.denominator_sign_stable(X)
+        X2 = np.linspace(2.0, 5.0, 10)[:, None]
+        assert rf.denominator_sign_stable(X2)
+
+
+class TestExprIR:
+    def test_arith_and_pieces(self):
+        x, y = var("x"), var("y")
+        e = Select(x > y, x * const(2.0), y - x)
+        assert e.count_pieces() == 2
+        assert e.eval({"x": 3.0, "y": 1.0}) == 6.0
+        assert e.eval({"x": 1.0, "y": 5.0}) == 4.0
+
+    def test_floor_ceil_div(self):
+        assert floor_div(var("a"), var("b")).eval({"a": 7, "b": 2}) == 3
+        assert ceil_div(var("a"), var("b")).eval({"a": 7, "b": 2}) == 4
+
+    def test_vectorized_eval(self):
+        e = Min(var("a"), const(4.0)) + Max(var("b"), const(0.0))
+        out = e.eval({"a": np.array([1.0, 9.0]), "b": np.array([-1.0, 2.0])})
+        np.testing.assert_allclose(out, [1.0, 6.0])
+
+    def test_source_matches_eval(self):
+        e = Select(var("x") >= const(2.0),
+                   Floor(var("x") / const(2.0)) * const(3.0),
+                   Ceil(var("x") * const(0.5)))
+        src = e.to_source()
+        for xv in (0.5, 1.9, 2.0, 7.3):
+            got = eval(src, {"math": math, "x": xv})
+            assert got == pytest.approx(float(e.eval({"x": xv})))
+
+
+class TestOccupancyPrograms:
+    def test_cuda_occupancy_five_pieces(self):
+        # Fig. 2 has exactly 5 terminating leaves.
+        occ = cuda_occupancy_program()
+        assert occ.outputs["B_active"].count_pieces() == 5
+
+    def test_cuda_occupancy_vs_bruteforce(self):
+        occ = cuda_occupancy_program()
+        H = dict(R_max=65536, Z_max=49152, T_max=1024, B_max=32, W_max=64)
+
+        def brute(R, Z, T):
+            if T > H["T_max"] or R * T > H["R_max"]:
+                return 0
+            if Z > 0 and Z > H["Z_max"]:
+                return 0
+            b = min(H["B_max"], H["T_max"] // T, H["R_max"] // (R * T))
+            if Z > 0:
+                b = min(b, H["Z_max"] // Z)
+            return min((b * T) // 32, H["W_max"])
+
+        rng = np.random.RandomState(0)
+        for _ in range(200):
+            R = int(rng.choice([16, 32, 64, 128, 255]))
+            Z = int(rng.choice([0, 1024, 4096, 65536]))
+            T = int(rng.choice([32, 128, 256, 512, 1024, 2048]))
+            got = occ.eval({**H, "R": R, "Z": Z, "T": T}, output="W_active")
+            assert got == brute(R, Z, T), (R, Z, T)
+
+    def test_tpu_occupancy(self):
+        occ = tpu_pipeline_occupancy_program()
+        env = {"vmem": 128 * 2 ** 20, "stage_bytes": 30 * 2 ** 20}
+        assert occ.eval(env, output="buffers") == 3
+        assert occ.eval(env, output="overlap") == 1.0
+        env["stage_bytes"] = 100 * 2 ** 20
+        assert occ.eval(env, output="buffers") == 1
+        assert occ.eval(env, output="overlap") == 0.0
+
+    def test_flowchart_export(self):
+        occ = cuda_occupancy_program()
+        chart = occ.to_flowchart()
+        assert "decide" in chart and "compute" in chart

@@ -1,0 +1,149 @@
+"""KLARAPTOR pipeline tests: collection, drivers, selection quality.
+
+The headline property (paper Fig. 1): on the simulated v5e, the driver's
+chosen configuration reaches >= 85% of the exhaustive-search optimum for
+most kernels/sizes, while probing only small data sizes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (Klaraptor, V5E, V5P, V5eSimulator, exhaustive_search,
+                        flash_attention_spec, matmul_spec, moe_gmm_spec,
+                        polybench_suite, selection_ratio, ssd_scan_spec)
+from repro.core.driver import DriverProgram, get_driver, register_driver, \
+    registry
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return V5eSimulator(noise=0.04, seed=7)
+
+
+@pytest.fixture(scope="module")
+def matmul_build(sim):
+    kl = Klaraptor(sim)
+    return kl.build_driver(matmul_spec(), repeats=2, max_configs_per_size=24,
+                           register=False)
+
+
+class TestPipeline:
+    def test_build_produces_sound_fits(self, matmul_build):
+        for m, f in matmul_build.fits.items():
+            assert np.isfinite(f.rel_error), m
+            assert f.rel_error < 0.5, (m, f.rel_error)
+
+    def test_selection_quality_matmul(self, sim, matmul_build):
+        ratios = []
+        for n in (2048, 4096, 8192):
+            r = selection_ratio(matmul_spec(), sim, matmul_build.driver,
+                                {"m": n, "n": n, "k": n})
+            ratios.append(r["ratio"])
+        # Fig. 1 criterion: >= 85% of optimal counts as good.
+        assert np.median(ratios) >= 0.85, ratios
+
+    def test_extrapolates_beyond_probe_sizes(self, sim, matmul_build):
+        # probes ran at <= 1024; selection at 16k must still be sane
+        r = selection_ratio(matmul_spec(), sim, matmul_build.driver,
+                            {"m": 16384, "n": 16384, "k": 16384})
+        assert r["ratio"] >= 0.7, r
+
+    def test_history_memoization(self, matmul_build):
+        d = matmul_build.driver
+        D = {"m": 4096, "n": 4096, "k": 4096}
+        first = d.choose(D)
+        assert d.namespace["_HISTORY"]
+        assert d.choose(D) == first
+
+    def test_system_time_vs_exhaustive(self, sim, matmul_build):
+        """Fig. 3: the tool's device-time budget (probing) is orders of
+        magnitude below exhaustively running every config at target sizes."""
+        probe_s = matmul_build.probe_device_seconds
+        exhaustive_s = 0.0
+        for n in (2048, 4096, 8192):
+            _, _, _, total = exhaustive_search(matmul_spec(), sim,
+                                               {"m": n, "n": n, "k": n})
+            exhaustive_s += total
+        assert probe_s < exhaustive_s / 10.0, (probe_s, exhaustive_s)
+
+
+class TestOtherKernels:
+    @pytest.mark.parametrize("spec_fn,D", [
+        (flash_attention_spec,
+         {"bh": 64, "sq": 8192, "skv": 8192}),
+        (moe_gmm_spec, {"e": 8, "g": 4096, "k": 4096, "n": 1536}),
+    ])
+    def test_selection_quality(self, sim, spec_fn, D):
+        spec = spec_fn()
+        kl = Klaraptor(sim)
+        build = kl.build_driver(spec, repeats=2, max_configs_per_size=24,
+                                register=False)
+        r = selection_ratio(spec, sim, build.driver, D)
+        assert r["ratio"] >= 0.7, r
+
+    def test_ssd_chunk_tuning(self, sim):
+        spec = ssd_scan_spec()
+        kl = Klaraptor(sim)
+        build = kl.build_driver(
+            spec, probe_data=[{"bh": 8, "s": 2048, "chunkflops": 1},
+                              {"bh": 8, "s": 4096, "chunkflops": 1}],
+            repeats=2, register=False)
+        r = selection_ratio(spec, sim, build.driver,
+                            {"bh": 48, "s": 65536, "chunkflops": 1})
+        assert r["ratio"] >= 0.7, r
+
+
+class TestPerformancePortability:
+    def test_different_device_different_choice_possible(self, sim):
+        """Optimal configs may differ across devices (paper Section I);
+        drivers built for v5e and v5p must at minimum each stay near-optimal
+        on their own device."""
+        spec = matmul_spec()
+        kl_e = Klaraptor(V5eSimulator(V5E, noise=0.03, seed=1))
+        kl_p = Klaraptor(V5eSimulator(V5P, noise=0.03, seed=1))
+        b_e = kl_e.build_driver(spec, repeats=2, max_configs_per_size=16,
+                                register=False)
+        b_p = kl_p.build_driver(spec, repeats=2, max_configs_per_size=16,
+                                register=False)
+        D = {"m": 4096, "n": 4096, "k": 4096}
+        r_e = selection_ratio(spec, kl_e.device, b_e.driver, D, hw=V5E)
+        r_p = selection_ratio(spec, kl_p.device, b_p.driver, D, hw=V5P)
+        assert r_e["ratio"] >= 0.8 and r_p["ratio"] >= 0.8
+
+
+class TestDriverProgram:
+    def test_generated_source_is_self_contained(self, matmul_build, tmp_path):
+        p = tmp_path / "driver.py"
+        matmul_build.driver.save(str(p))
+        src = p.read_text()
+        assert "import math" in src and "def choose" in src
+        loaded = DriverProgram.load("matmul_b16", str(p))
+        D = {"m": 2048, "n": 2048, "k": 2048}
+        assert loaded.choose(D) == matmul_build.driver.choose(D)
+
+    def test_registry_dispatch(self, matmul_build):
+        registry.clear()
+        assert get_driver("matmul_b16") is None
+        register_driver(matmul_build.driver)
+        assert get_driver("matmul_b16") is matmul_build.driver
+        registry.clear()
+
+    def test_estimate_positive_and_monotone_in_size(self, matmul_build):
+        d = matmul_build.driver
+        P = {"bm": 128, "bn": 512, "bk": 512}
+        t1 = d.estimate({"m": 1024, "n": 1024, "k": 1024}, P)
+        t2 = d.estimate({"m": 4096, "n": 4096, "k": 4096}, P)
+        assert 0 < t1 < t2
+
+
+class TestPolybenchSuite:
+    def test_suite_covers_table1_families(self):
+        suite = polybench_suite()
+        for name in ("gemm", "atax_k1", "bicg_k1", "mvt_k1", "conv2d",
+                     "corr", "gesummv", "syrk", "reduce",
+                     "gramschmidt_k1"):
+            assert name in suite
+        for spec in suite.values():
+            cands = spec.candidates(
+                {d: 1024 for d in spec.data_params})
+            assert cands, spec.name

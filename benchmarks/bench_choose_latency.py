@@ -1,0 +1,132 @@
+"""Choose-latency benchmark: scalar loop vs vectorized rational program.
+
+The point of the paper's rational program R is that runtime selection is
+cheap (Section IV, Fig. 3).  The seed drivers nevertheless evaluated E with
+a per-config Python loop; the vectorized drivers evaluate the whole
+candidate table in ndarray passes.  This benchmark measures both on a
+>= 256-config kernel and records the wall time of the (batched) exhaustive
+search baseline, writing ``BENCH_choose.json`` next to this file.
+
+    PYTHONPATH=src python benchmarks/bench_choose_latency.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import Klaraptor, V5eSimulator, exhaustive_search, matmul_spec
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_choose.json")
+
+# Denser candidate grids than the default matmul spec so the feasible set
+# comfortably exceeds 256 configurations (the acceptance threshold).
+DENSE_CANDIDATES = {
+    "bm": (8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024),
+    "bn": (128, 256, 384, 512, 768, 1024, 1536, 2048),
+    "bk": (128, 256, 384, 512, 768, 1024),
+}
+
+D = {"m": 8192, "n": 8192, "k": 8192}
+
+
+def _dense_spec():
+    spec = matmul_spec()
+    spec.name = "matmul_dense_bench"
+    spec.param_candidates = dict(DENSE_CANDIDATES)
+    return spec
+
+
+def _scalar_choose(driver, D, margin=0.02):
+    """The seed driver's selection loop: one Python-level estimate() call per
+    configuration, then sort + tie-break in Python (reference baseline)."""
+    ns = driver.namespace
+    cols = ns["candidates"](**D)
+    params = ns["PROGRAM_PARAMS"]
+    n = int(cols[params[0]].shape[0])
+    scored = []
+    for i in range(n):
+        P = {p: int(cols[p][i]) for p in params}
+        scored.append((float(ns["estimate"](**D, **P)), tuple(P.values())))
+    scored.sort(key=lambda t: t[0])
+    best_t = scored[0][0]
+    near = [c for t, c in scored if t <= best_t * (1.0 + margin)]
+
+    def _tiebreak(cfg):
+        P = dict(zip(params, cfg))
+        return (-float(ns["pipeline_buffers"](**D, **P)),
+                float(ns["grid_steps"](**D, **P)))
+
+    near.sort(key=_tiebreak)
+    return dict(zip(params, near[0])), n
+
+
+def _vector_choose(driver, D):
+    driver.namespace["_HISTORY"].clear()   # time the evaluation, not the memo
+    return driver.choose(D)
+
+
+def _time(fn, *args, reps=5):
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def run() -> dict:
+    spec = _dense_spec()
+    sim = V5eSimulator(noise=0.03, seed=17)
+    kl = Klaraptor(sim, cache=False)
+    build = kl.build_driver(spec, repeats=2, max_configs_per_size=24,
+                            register=False)
+
+    (scalar_cfg, n_configs), scalar_s = _time(_scalar_choose,
+                                              build.driver, D)
+    vector_cfg, vector_s = _time(_vector_choose, build.driver, D)
+
+    t0 = time.perf_counter()
+    best_P, best_t, n_exh, device_s = exhaustive_search(spec, sim, D)
+    exhaustive_wall_s = time.perf_counter() - t0
+
+    result = {
+        "kernel": spec.name,
+        "D": D,
+        "n_configs": n_configs,
+        "scalar_choose_s": scalar_s,
+        "vectorized_choose_s": vector_s,
+        "speedup": scalar_s / max(vector_s, 1e-12),
+        "chosen_scalar": scalar_cfg,
+        "chosen_vectorized": vector_cfg,
+        "agree": scalar_cfg == vector_cfg,
+        "exhaustive_wall_s": exhaustive_wall_s,
+        "exhaustive_device_s": device_s,
+        "exhaustive_n_configs": n_exh,
+        "build_wall_s": build.build_wall_seconds,
+    }
+    return result
+
+
+def main() -> list[str]:
+    r = run()
+    with open(OUT_PATH, "w") as f:
+        json.dump(r, f, indent=2)
+    return [
+        f"choose/scalar,{r['scalar_choose_s'] * 1e6:.0f},"
+        f"n_configs={r['n_configs']}",
+        f"choose/vectorized,{r['vectorized_choose_s'] * 1e6:.0f},"
+        f"speedup={r['speedup']:.1f}x agree={r['agree']}",
+        f"choose/exhaustive,{r['exhaustive_wall_s'] * 1e6:.0f},"
+        f"device_s={r['exhaustive_device_s']:.3f}",
+    ]
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

@@ -25,11 +25,11 @@ def run(kernels=KERNELS) -> list[dict]:
         min_align = []
         for n in SIZES:
             D = dict(zip(spec.data_params, (n,) * len(spec.data_params)))
-            cands = spec.candidates(D)
-            pred = np.array([build.driver.estimate(D, P) for P in cands])
-            actual = np.array([sim.true_time(spec.traffic(D, P))
-                               for P in cands])
-            if len(cands) >= 3:
+            table = spec.candidates(D)
+            # Both curves in one ndarray pass over the candidate table.
+            pred = build.driver.estimate_batch(D, table.columns)
+            actual = sim.true_time_batch(spec.traffic_table(D, table))
+            if len(table) >= 3:
                 corr_per_size.append(float(np.corrcoef(
                     np.log(pred), np.log(actual))[0, 1]))
             min_align.append(actual[int(np.argmin(pred))]

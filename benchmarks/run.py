@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV lines:
   table1-- chosen/best configs per kernel per size (paper Table I)
   fig3  -- system time: KLARAPTOR vs exhaustive search (paper Fig. 3)
   fig4  -- predicted-vs-actual trend alignment (paper Fig. 4)
+  choose-- scalar vs vectorized driver choose() latency (BENCH_choose.json)
   roofline -- three-term roofline per dry-run cell (assignment g), if
               dry-run artifacts exist
 """
@@ -15,10 +16,10 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (fig1_accuracy, fig3_system_time, fig4_trends,
-                            table1_configs)
+    from benchmarks import (bench_choose_latency, fig1_accuracy,
+                            fig3_system_time, fig4_trends, table1_configs)
     for mod in (fig1_accuracy, table1_configs, fig3_system_time,
-                fig4_trends):
+                fig4_trends, bench_choose_latency):
         for line in mod.main():
             print(line, flush=True)
     try:

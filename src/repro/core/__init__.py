@@ -3,17 +3,22 @@
 Public API re-exports.  See DESIGN.md for the paper-to-TPU mapping.
 """
 
+from .cache import (
+    CacheEntry, DriverCache, cache_key, default_cache, default_cache_dir,
+    spec_fingerprint,
+)
 from .device_model import (
-    V5E, V5P, DeviceModel, HardwareParams, KernelTraffic, ProbeRecord,
-    V5eSimulator,
+    V5E, V5P, DeviceModel, HardwareParams, KernelTraffic, ProbeBatch,
+    ProbeRecord, TrafficOperand, TrafficTable, V5eSimulator,
 )
 from .driver import (
     DriverProgram, choose_or_default, get_driver, register_driver, registry,
+    warm_start_from_cache,
 )
 from .fitting import FitResult, fit_auto, fit_polynomial, fit_rational
 from .kernel_spec import (
-    GridAxis, KernelSpec, Operand, flash_attention_spec, matmul_spec,
-    moe_gmm_spec, polybench_suite, ssd_scan_spec,
+    CandidateTable, GridAxis, KernelSpec, Operand, flash_attention_spec,
+    matmul_spec, moe_gmm_spec, polybench_suite, ssd_scan_spec,
 )
 from .occupancy import cuda_occupancy_program, tpu_pipeline_occupancy_program
 from .perf_model import LOW_LEVEL_METRICS, build_time_program
@@ -26,12 +31,16 @@ from .rational_program import (
 from .tuner import BuildResult, Klaraptor, exhaustive_search, selection_ratio
 
 __all__ = [
+    "CacheEntry", "DriverCache", "cache_key", "default_cache",
+    "default_cache_dir", "spec_fingerprint",
     "V5E", "V5P", "DeviceModel", "HardwareParams", "KernelTraffic",
-    "ProbeRecord", "V5eSimulator",
+    "ProbeBatch", "ProbeRecord", "TrafficOperand", "TrafficTable",
+    "V5eSimulator",
     "DriverProgram", "choose_or_default", "get_driver", "register_driver",
-    "registry",
+    "registry", "warm_start_from_cache",
     "FitResult", "fit_auto", "fit_polynomial", "fit_rational",
-    "GridAxis", "KernelSpec", "Operand", "flash_attention_spec",
+    "CandidateTable", "GridAxis", "KernelSpec", "Operand",
+    "flash_attention_spec",
     "matmul_spec", "moe_gmm_spec", "polybench_suite", "ssd_scan_spec",
     "cuda_occupancy_program", "tpu_pipeline_occupancy_program",
     "LOW_LEVEL_METRICS", "build_time_program",

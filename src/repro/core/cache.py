@@ -1,0 +1,233 @@
+"""Persistent driver-artifact cache: tuned drivers survive the process.
+
+The paper's pipeline is compile-time-expensive (probe -> SVD fit -> codegen)
+and runtime-cheap; a serving fleet cannot re-pay the compile-time cost in
+every worker process.  This module is the durable tuning-results store (the
+MITuna find-db analogue): each built driver program is written to disk as a
+JSON artifact, content-addressed by a *build key* -- the SHA-256 of the
+kernel spec fingerprint, the hardware parameters, and the fit hyperparameters
+-- so any change to the spec, the target device, or the tuning settings
+invalidates the entry by construction.
+
+Two hashes protect an entry:
+
+  * ``key``          -- hash of the build inputs (lookup address).  A spec
+                        or hyperparameter change produces a different key,
+                        so stale artifacts are simply never found.
+  * ``content_hash`` -- hash of the stored payload (driver source + fitted
+                        coefficients).  Verified on every read; a mismatch
+                        (corruption, manual edit, partial write) invalidates
+                        the entry, which is deleted and treated as a miss.
+
+Layout: ``<root>/<kernel>/<key>.json``.  The root defaults to
+``$KLARAPTOR_CACHE_DIR`` or ``~/.cache/klaraptor``.
+
+``Klaraptor.build_driver`` writes through this store; the driver registry
+(``core/driver.py``) reads through it, so ``choose_or_default`` -- and with
+it ``kernels/ops.py`` and the serving engine -- warm-start tuned drivers
+built by any earlier process.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Mapping
+
+from .device_model import HardwareParams
+from .kernel_spec import KernelSpec
+
+__all__ = [
+    "DriverCache", "CacheEntry", "cache_key", "spec_fingerprint",
+    "default_cache", "default_cache_dir",
+]
+
+_ENTRY_VERSION = 1
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get("KLARAPTOR_CACHE_DIR")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "klaraptor")
+
+
+def _canonical(obj: Any) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def _sha(payload: Any) -> str:
+    return hashlib.sha256(_canonical(payload).encode()).hexdigest()
+
+
+def spec_fingerprint(spec: KernelSpec) -> dict:
+    """JSON-able description of everything about a spec that affects the
+    built driver.  Any edit to the spec changes the fingerprint and hence
+    the cache key (stale-by-construction)."""
+    return {
+        "name": spec.name,
+        "data_params": list(spec.data_params),
+        "program_params": list(spec.program_params),
+        "grid": [[a.name, a.data, a.block] for a in spec.grid],
+        "operands": [[op.name, list(op.tile), list(op.deps),
+                      op.dtype_bytes, op.is_output] for op in spec.operands],
+        "flops_per_point": spec.flops_per_point,
+        "constraints": list(spec.constraints),
+        "mxu_fraction": spec.mxu_fraction,
+        "param_candidates": {k: list(v)
+                             for k, v in sorted(spec.param_candidates.items())},
+        "pipeline_buffers": spec.pipeline_buffers,
+        "fit_vars": {k: list(v) for k, v in sorted(spec.fit_vars.items())},
+    }
+
+
+def cache_key(spec: KernelSpec, hw: HardwareParams,
+              hyper: Mapping[str, Any]) -> str:
+    """Content address of one driver build: spec + hardware + fit hyperparams."""
+    return _sha({
+        "version": _ENTRY_VERSION,
+        "spec": spec_fingerprint(spec),
+        "hw": dataclasses.asdict(hw),
+        "hyper": dict(sorted(hyper.items())),
+    })
+
+
+@dataclass
+class CacheEntry:
+    kernel: str
+    key: str
+    source: str                     # generated driver module source
+    fits: dict                      # metric -> {function json + fit stats}
+    stats: dict                     # probe counts / device seconds of the build
+    created_at: float
+    hw_name: str
+
+    def content_hash(self) -> str:
+        return _sha({"source": self.source, "fits": self.fits})
+
+
+class DriverCache:
+    """On-disk, content-addressed store of generated driver artifacts."""
+
+    def __init__(self, root: str | None = None):
+        self.root = root or default_cache_dir()
+
+    # -- paths ---------------------------------------------------------------
+    def _kernel_dir(self, kernel: str) -> str:
+        return os.path.join(self.root, kernel)
+
+    def path(self, kernel: str, key: str) -> str:
+        return os.path.join(self._kernel_dir(kernel), f"{key}.json")
+
+    # -- read ----------------------------------------------------------------
+    def get(self, kernel: str, key: str) -> CacheEntry | None:
+        """Entry for an exact build key, or None (miss / stale)."""
+        return self._load(self.path(kernel, key), expect_key=key)
+
+    def lookup_latest(self, kernel: str,
+                      hw_name: str | None = None) -> CacheEntry | None:
+        """Most recently built valid entry for a kernel (read-through path:
+        the caller knows the kernel name but not the build hyperparams).
+
+        ``hw_name`` filters to entries tuned for that device: launch
+        parameters optimal on one device are generally not on another
+        (the paper's performance-portability point), so a mismatched entry
+        must read as a miss, not a warm start.
+        """
+        d = self._kernel_dir(kernel)
+        try:
+            names = os.listdir(d)
+        except OSError:
+            return None
+
+        def _mtime(p: str) -> float:
+            # Concurrent workers evict stale entries; a vanished file just
+            # sorts last instead of raising.
+            try:
+                return os.path.getmtime(p)
+            except OSError:
+                return 0.0
+
+        paths = [os.path.join(d, f) for f in names if f.endswith(".json")]
+        for p in sorted(paths, key=_mtime, reverse=True):
+            entry = self._load(p)
+            if entry is not None and (hw_name is None
+                                      or entry.hw_name == hw_name):
+                return entry
+        return None
+
+    def _load(self, path: str, expect_key: str | None = None
+              ) -> CacheEntry | None:
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            entry = CacheEntry(
+                kernel=raw["kernel"], key=raw["key"], source=raw["source"],
+                fits=raw["fits"], stats=raw.get("stats", {}),
+                created_at=raw.get("created_at", 0.0),
+                hw_name=raw.get("hw_name", ""))
+        except (OSError, ValueError, KeyError):
+            return None
+        # Stale-hash invalidation: stored payload must hash to the recorded
+        # content hash, and the entry must live under the key it claims.
+        if raw.get("content_hash") != entry.content_hash() or \
+                (expect_key is not None and entry.key != expect_key):
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+        return entry
+
+    # -- write ---------------------------------------------------------------
+    def put(self, entry: CacheEntry) -> str:
+        d = self._kernel_dir(entry.kernel)
+        os.makedirs(d, exist_ok=True)
+        path = self.path(entry.kernel, entry.key)
+        raw = {
+            "version": _ENTRY_VERSION,
+            "kernel": entry.kernel,
+            "key": entry.key,
+            "source": entry.source,
+            "fits": entry.fits,
+            "stats": entry.stats,
+            "created_at": entry.created_at or time.time(),
+            "hw_name": entry.hw_name,
+            "content_hash": entry.content_hash(),
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(raw, f)
+        os.replace(tmp, path)       # atomic: concurrent readers never see halves
+        return path
+
+    # -- maintenance ----------------------------------------------------------
+    def kernels(self) -> list[str]:
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(
+            k for k in os.listdir(self.root)
+            if os.path.isdir(self._kernel_dir(k)))
+
+    def clear(self) -> None:
+        for kernel in self.kernels():
+            d = self._kernel_dir(kernel)
+            for f in os.listdir(d):
+                try:
+                    os.remove(os.path.join(d, f))
+                except OSError:
+                    pass
+            try:
+                os.rmdir(d)
+            except OSError:
+                pass
+
+
+def default_cache() -> DriverCache:
+    """Process default cache (re-reads $KLARAPTOR_CACHE_DIR on every call so
+    tests and multi-tenant jobs can redirect it)."""
+    return DriverCache()

@@ -1,4 +1,4 @@
-"""Code generation (paper Section IV, step 3).
+"""Code generation (paper Section IV, step 3) -- vectorized drivers.
 
 The paper converts the rational program R into C code and inserts it into the
 CUDA program so it is "called before the execution of the corresponding
@@ -7,21 +7,27 @@ program -- with:
 
   * one function per fitted rational function g_i(D, P),
   * ``estimate(**DP)``: the full piecewise rational program E(D, P),
+    ndarray-polymorphic: scalars in -> scalar out, columns in -> column out,
   * ``candidates(**D)``: the feasible configuration enumerator, generated
     from the spec's parameter grids and its Python-syntax constraint strings
-    (mirroring the user-written configuration files of Section V-A),
-  * ``choose(**D)``: steps 4-6's runtime selection -- evaluate E over every
-    feasible P, pick the argmin with the occupancy tie-break heuristic, and
-    memoize into a decision-history table.
+    (mirroring the user-written configuration files of Section V-A).  It
+    returns a *columnar table* -- a dict of one int64 ndarray per program
+    parameter -- with every constraint applied as a vectorized mask,
+  * ``choose(**D)``: steps 4-6's runtime selection -- evaluate E once over
+    the whole candidate table, argmin + the occupancy tie-break heuristic in
+    numpy (no per-config Python loop), memoized into a decision history.
 
-The generated source has no imports beyond ``math`` and no dependency on this
-package: it can be dropped next to any JAX program, exactly as the paper's
-generated C driver is linked into the instrumented binary.
+The generated source has no imports beyond ``numpy`` and no dependency on
+this package: it can be dropped next to any JAX program, exactly as the
+paper's generated C driver is linked into the instrumented binary.
 """
 
 from __future__ import annotations
 
+import math
 import textwrap
+
+import numpy as np
 
 from .device_model import HardwareParams, V5E
 from .kernel_spec import KernelSpec
@@ -38,9 +44,12 @@ kernel:  {kernel}
 device:  {device}
 This module is the rational program R of the paper: it estimates the kernel's
 execution time E(D, P) as a piecewise rational function and selects optimal
-launch parameters at runtime.  Generated code -- do not edit.
+launch parameters at runtime.  All evaluation is vectorized over the whole
+candidate table.  Generated code -- do not edit.
 """
 import math
+
+import numpy as np
 
 KERNEL = {kernel!r}
 DEVICE = {device!r}
@@ -48,8 +57,28 @@ VMEM_BYTES = {vmem}
 MAX_STAGES = {max_stages}
 DATA_PARAMS = {data_params!r}
 PROGRAM_PARAMS = {program_params!r}
+PARAM_CANDIDATES = {param_candidates!r}
+CONSTRAINTS = {constraints!r}
 
 _HISTORY = {{}}  # decision history: D tuple -> chosen P tuple
+
+
+def _row_mask(ci, scalars, cols):
+    """Per-row fallback for a constraint that resists ndarray evaluation
+    (e.g. `and`/`or` between array terms, chained comparisons); mirrors the
+    spec-side feasible_mask fallback.  Rows that fail to evaluate are
+    infeasible."""
+    n = next(iter(cols.values())).shape[0]
+    out = np.empty(n, dtype=bool)
+    g = {{"__builtins__": {{}}, "math": math, "np": np}}
+    for i in range(n):
+        env = dict(scalars)
+        env.update({{p: int(a[i]) for p, a in cols.items()}})
+        try:
+            out[i] = bool(eval(CONSTRAINTS[ci], g, env))
+        except Exception:
+            out[i] = False
+    return out
 '''
 
 
@@ -59,6 +88,25 @@ def _fn_source(name: str, rf: RationalFunction) -> str:
             f"    return {rf.to_source()}\n")
 
 
+def _constraint_vectorizable(c: str, spec: KernelSpec,
+                             hw: HardwareParams) -> bool:
+    """Whether a constraint string evaluates cleanly with ndarray columns.
+
+    Vectorizability is structural (boolean `and`/`or` and chained
+    comparisons break on arrays regardless of values), so probing with
+    dummy columns decides which emission strategy the driver gets."""
+    env: dict = {p: np.array([8, 16], dtype=np.int64)
+                 for p in spec.program_params}
+    env.update({d: 64 for d in spec.data_params})
+    env["vmem"] = hw.vmem_bytes
+    try:
+        res = eval(c, {"__builtins__": {}, "math": math, "np": np}, env)
+        np.broadcast_to(np.asarray(res, dtype=bool), (2,))
+        return True
+    except Exception:
+        return False
+
+
 def generate_driver_source(
     spec: KernelSpec,
     program: RationalProgram,
@@ -66,22 +114,29 @@ def generate_driver_source(
     hw: HardwareParams = V5E,
     max_stages: int = 3,
 ) -> str:
+    cand_lists = {p: tuple(spec.default_candidates(p, {}))
+                  for p in spec.program_params}
     parts = [_HEADER.format(
         kernel=spec.name, device=hw.name, vmem=hw.vmem_bytes,
         max_stages=max_stages, data_params=tuple(spec.data_params),
         program_params=tuple(spec.program_params),
+        param_candidates=cand_lists,
+        constraints=tuple(spec.constraints),
     )]
 
-    # Fitted low-level metric subroutines (step 3-ii).
+    # Fitted low-level metric subroutines (step 3-ii).  Polynomial arithmetic
+    # (+ * ** /) is ndarray-safe as emitted.
     for metric in LOW_LEVEL_METRICS:
         rf = fitted[metric]
         parts.append(_fn_source(f"g_{metric}", rf))
 
     # Symbolic skeleton pieces (step 3-i): grid steps, stage bytes, buffers.
+    # Emitted in vector form (np.ceil/np.floor/np.minimum) so one call covers
+    # the whole candidate table; scalars degrade gracefully.
     all_params = list(spec.data_params) + list(spec.program_params)
     sig = ", ".join(all_params)
-    steps_src = spec.grid_steps_expr().to_source()
-    stage_src = spec.vmem_stage_expr(hw).to_source()
+    steps_src = spec.grid_steps_expr().to_source(vector=True)
+    stage_src = spec.vmem_stage_expr(hw).to_source(vector=True)
     parts.append(textwrap.dedent(f'''\
         def grid_steps({sig}):
             return {steps_src}
@@ -90,58 +145,75 @@ def generate_driver_source(
             return {stage_src}
 
         def pipeline_buffers({sig}):
-            return min(math.floor(VMEM_BYTES / max(stage_bytes({sig}), 1.0)),
-                       MAX_STAGES)
+            return np.minimum(
+                np.floor(VMEM_BYTES / np.maximum(stage_bytes({sig}), 1.0)),
+                MAX_STAGES)
         '''))
 
-    # estimate(): the piecewise rational program E(D, P).
+    # estimate(): the piecewise rational program E(D, P), one ndarray pass.
     metric_calls = {}
     for metric in LOW_LEVEL_METRICS:
         args = ", ".join(fitted[metric].var_names)
         metric_calls[metric] = f"g_{metric}({args})"
     parts.append(textwrap.dedent(f'''\
         def estimate({sig}):
-            """E(D, P): piecewise rational estimate of execution time (s)."""
+            """E(D, P): piecewise rational estimate of execution time (s).
+
+            ndarray-polymorphic: program params may be columns of the
+            candidate table, in which case a column of estimates returns.
+            """
             steps = grid_steps({sig})
             mem = {metric_calls["mem_step"]}
             cmp = {metric_calls["cmp_step"]}
             ovh = {metric_calls["ovh_step"]}
-            if pipeline_buffers({sig}) >= 2:
-                return steps * (max(mem, cmp) + ovh)
-            return steps * (mem + cmp + ovh)
+            overlapped = steps * (np.maximum(mem, cmp) + ovh)
+            serialized = steps * (mem + cmp + ovh)
+            return np.where(pipeline_buffers({sig}) >= 2,
+                            overlapped, serialized)
         '''))
 
-    # candidates(): feasible-set enumeration from the spec's constraint
-    # strings (the paper's user-provided Python-syntax config files).
+    # candidates(): columnar feasible-set enumeration from the spec's
+    # constraint strings (the paper's user-provided Python-syntax config
+    # files), applied as vectorized masks over the Cartesian grid.
     d_sig = ", ".join(spec.data_params)
-    cand_lists = {p: spec.param_candidates.get(
-        p, tuple(2 ** i for i in range(3, 12)))
-        for p in spec.program_params}
-    constraint_src = " and ".join(f"({c})" for c in spec.constraints) or "True"
     p_names = list(spec.program_params)
-    loops = []
-    indent = "    "
-    for i, p in enumerate(p_names):
-        loops.append(f"{indent * (i + 1)}for {p} in {cand_lists[p]!r}:")
-    body_indent = indent * (len(p_names) + 1)
+    unpack = "\n".join(f"    {p} = cols[{p!r}]" for p in p_names)
+    scalars = ("{" + ", ".join([f"{d!r}: {d}" for d in spec.data_params]
+                               + ["'vmem': VMEM_BYTES"]) + "}")
+    mask_srcs = [
+        f"    mask &= ({c})" if _constraint_vectorizable(c, spec, hw)
+        else f"    mask &= _row_mask({i}, {scalars}, cols)"
+        for i, c in enumerate(spec.constraints)]
+    # Built-in feasibility (mirrors KernelSpec.feasible_mask): a tile may
+    # not exceed its data extent beyond one padded block.
+    for a in spec.grid:
+        if a.block is not None and isinstance(a.data, str):
+            mask_srcs.append(
+                f"    mask &= ({a.block} <= (({a.data} + 7) // 8) * 8)")
+    mask_lines = "\n".join(mask_srcs)
     parts.append(textwrap.dedent(f'''\
         def candidates({d_sig}):
-            out = []
-        ''') + "\n".join(loops) + f'''
-{body_indent}if not ({constraint_src}):
-{body_indent}    continue
-{body_indent}if stage_bytes({sig}) * {spec.pipeline_buffers} > VMEM_BYTES:
-{body_indent}    continue
-{body_indent}out.append(({", ".join(p_names)},))
-    return out
+            """Columnar feasible configuration table: one int64 ndarray per
+            program parameter, constraints applied as vectorized masks."""
+            grids = np.meshgrid(
+                *[np.asarray(PARAM_CANDIDATES[p], dtype=np.int64)
+                  for p in PROGRAM_PARAMS], indexing="ij")
+            cols = {{p: g.reshape(-1) for p, g in zip(PROGRAM_PARAMS, grids)}}
+        ''') + unpack + f'''
+    vmem = VMEM_BYTES
+    mask = np.ones({p_names[0]}.shape, dtype=bool)
+''' + (mask_lines + "\n" if mask_lines else "") + f'''\
+    mask &= (stage_bytes({sig}) * {spec.pipeline_buffers} <= VMEM_BYTES)
+    return {{p: c[mask] for p, c in cols.items()}}
 ''')
 
-    # choose(): steps 4-6 with tie-break and decision history.
+    # choose(): steps 4-6 -- one vectorized evaluation of E over the table,
+    # argmin + tie-break via lexsort, memoized decision history.
     parts.append(textwrap.dedent(f'''\
         def choose({d_sig}, margin=0.02):
             """Select optimal launch parameters for data parameters D.
 
-            Evaluates E over every feasible configuration, keeps all configs
+            Evaluates E once over the whole candidate table, keeps configs
             within ``margin`` of the minimum, and breaks ties by the platform
             heuristic: highest pipeline-buffer count, then fewest grid steps
             (secondary metric of Section IV step 5).  Memoized per D.
@@ -150,23 +222,23 @@ def generate_driver_source(
             hit = _HISTORY.get(key)
             if hit is not None:
                 return dict(zip(PROGRAM_PARAMS, hit))
-            cands = candidates({d_sig})
-            if not cands:
-                raise ValueError("no feasible launch configuration")
-            scored = []
-            for cfg in cands:
-                {", ".join(p_names)} = cfg{"" if len(p_names) > 1 else "[0]"}
-                scored.append((estimate({sig}), cfg))
-            scored.sort(key=lambda t: t[0])
-            best_t = scored[0][0]
-            near = [c for t, c in scored if t <= best_t * (1.0 + margin)]
-            def _tiebreak(cfg):
-                {", ".join(p_names)} = cfg{"" if len(p_names) > 1 else "[0]"}
-                return (-pipeline_buffers({sig}), grid_steps({sig}))
-            near.sort(key=_tiebreak)
-            _HISTORY[key] = near[0]
-            return dict(zip(PROGRAM_PARAMS, near[0]))
-        '''))
+            cols = candidates({d_sig})
+        ''') + unpack + f'''
+    if {p_names[0]}.size == 0:
+        raise ValueError("no feasible launch configuration")
+    est = np.asarray(estimate({sig}), dtype=np.float64)
+    near = est <= float(np.min(est)) * (1.0 + margin)
+    buffers = pipeline_buffers({sig})
+    steps = grid_steps({sig})
+    # lexsort: last key is primary -- near-optimal first, then most
+    # pipeline buffers, then fewest grid steps.
+    order = np.lexsort((np.asarray(steps, dtype=np.float64),
+                        -np.asarray(buffers, dtype=np.float64), ~near))
+    pick = int(order[0])
+    cfg = tuple(int(cols[p][pick]) for p in PROGRAM_PARAMS)
+    _HISTORY[key] = cfg
+    return dict(zip(PROGRAM_PARAMS, cfg))
+''')
 
     return "\n\n".join(parts)
 

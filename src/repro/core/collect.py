@@ -1,9 +1,15 @@
-"""Data collection (paper Section IV, step 1).
+"""Data collection (paper Section IV, step 1) -- vectorized.
 
 Select a set of probe points K inside the (D, P) space -- small data sizes
 only, so that "the compile-time analysis cannot overwhelm the compilation
 time" -- execute the kernel at each point through the opaque device oracle,
 and record the low-level metric values V.
+
+The whole stage is struct-of-arrays: for each probe data size the feasible
+configurations arrive as a columnar ``CandidateTable``, the device oracle is
+probed once over the whole table (``DeviceModel.probe_batch``), and the
+per-step metric targets are derived in ndarray passes.  No per-config Python
+loop survives.
 
 Derived per-sample targets (the L_i of the MBP-CBP skeleton):
     mem_step = mem_time / grid_steps
@@ -17,7 +23,7 @@ fit VMEM), so what remains for ovh_step is dispatch overhead + overlap leak
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -25,41 +31,62 @@ import numpy as np
 from .device_model import DeviceModel, HardwareParams, V5E
 from .kernel_spec import KernelSpec
 
-__all__ = ["ProbeSample", "CollectedData", "default_probe_data", "collect"]
+__all__ = ["CollectedData", "default_probe_data", "collect"]
 
 Dims = Mapping[str, int]
 
-
-@dataclass
-class ProbeSample:
-    D: dict[str, int]
-    P: dict[str, int]
-    total_time_s: float
-    mem_step: float
-    cmp_step: float
-    ovh_step: float
-    grid_steps: int
-    vmem_stage_bytes: int
+# The columnar metric targets a collection run produces.
+METRIC_COLUMNS = ("total_time_s", "mem_step", "cmp_step", "ovh_step")
 
 
 @dataclass
 class CollectedData:
+    """Columnar probe dataset: one ndarray per variable and per metric.
+
+    ``columns`` holds one (n,) array for every data parameter and every
+    program parameter; ``metrics`` holds the derived per-step targets.  The
+    design matrix for the fitter is a pure column-stack (``matrix``).
+    """
+
     spec_name: str
-    samples: list[ProbeSample]
+    data_params: tuple[str, ...]
+    program_params: tuple[str, ...]
+    columns: dict[str, np.ndarray]
+    metrics: dict[str, np.ndarray]
+    grid_steps: np.ndarray
+    vmem_stage_bytes: np.ndarray
     n_probe_executions: int
     probe_device_seconds: float       # simulated device time spent probing
     collect_wall_seconds: float
 
+    def __len__(self) -> int:
+        return int(self.grid_steps.shape[0])
+
     def matrix(self, metric: str, var_names: Sequence[str]
                ) -> tuple[np.ndarray, np.ndarray]:
         """Design points X over ``var_names`` and targets y for ``metric``."""
-        X = np.array(
-            [[{**s.D, **s.P}[v] for v in var_names] for s in self.samples],
-            dtype=np.float64,
-        )
-        y = np.array([getattr(s, metric) for s in self.samples],
-                     dtype=np.float64)
+        X = np.stack(
+            [np.asarray(self.columns[v], dtype=np.float64)
+             for v in var_names], axis=1)
+        y = np.asarray(self.metrics[metric], dtype=np.float64)
         return X, y
+
+    @classmethod
+    def empty(cls, spec: KernelSpec, **stats) -> "CollectedData":
+        """Zero-sample dataset carrying only run statistics (cache hits)."""
+        return cls(
+            spec_name=spec.name,
+            data_params=tuple(spec.data_params),
+            program_params=tuple(spec.program_params),
+            columns={v: np.empty(0) for v in
+                     (*spec.data_params, *spec.program_params)},
+            metrics={m: np.empty(0) for m in METRIC_COLUMNS},
+            grid_steps=np.empty(0, dtype=np.int64),
+            vmem_stage_bytes=np.empty(0, dtype=np.int64),
+            n_probe_executions=stats.get("n_probe_executions", 0),
+            probe_device_seconds=stats.get("probe_device_seconds", 0.0),
+            collect_wall_seconds=stats.get("collect_wall_seconds", 0.0),
+        )
 
 
 def default_probe_data(spec: KernelSpec,
@@ -94,41 +121,56 @@ def collect(
     rng = np.random.RandomState(seed)
     probe_data = list(probe_data) if probe_data is not None else \
         default_probe_data(spec)
-    samples: list[ProbeSample] = []
+    all_vars = tuple(spec.data_params) + tuple(spec.program_params)
+    col_blocks: dict[str, list[np.ndarray]] = {v: [] for v in all_vars}
+    met_blocks: dict[str, list[np.ndarray]] = {m: [] for m in METRIC_COLUMNS}
+    steps_blocks: list[np.ndarray] = []
+    stage_blocks: list[np.ndarray] = []
     n_exec = 0
     device_seconds = 0.0
     for D in probe_data:
-        cands = spec.candidates(D, hw, limit=max_configs_per_size)
-        for P in cands:
-            w = spec.traffic(D, P, hw)
-            tot, mem, cmp_ = [], [], []
-            for _ in range(repeats):
-                rec = device.probe(w, rng)
-                tot.append(rec.total_time_s)
-                mem.append(rec.mem_time_s)
-                cmp_.append(rec.compute_time_s)
-                n_exec += 1
-                device_seconds += rec.total_time_s
-            t_tot = float(np.median(tot))
-            t_mem = float(np.median(mem))
-            t_cmp = float(np.median(cmp_))
-            steps = max(w.grid_steps, 1)
-            buffers = min(hw.vmem_bytes // max(w.vmem_stage_bytes, 1),
-                          max_stages)
-            skeleton = max(t_mem, t_cmp) if buffers >= 2 else (t_mem + t_cmp)
-            ovh = max((t_tot - skeleton) / steps, 1e-9)
-            samples.append(ProbeSample(
-                D=dict(D), P=dict(P),
-                total_time_s=t_tot,
-                mem_step=t_mem / steps,
-                cmp_step=t_cmp / steps,
-                ovh_step=ovh,
-                grid_steps=steps,
-                vmem_stage_bytes=w.vmem_stage_bytes,
-            ))
+        table = spec.candidates(D, hw, limit=max_configs_per_size)
+        n = len(table)
+        if n == 0:
+            continue
+        tt = spec.traffic_table(D, table, hw)
+        batch = device.probe_batch(tt, rng, repeats=repeats)
+        n_exec += batch.n_executions
+        device_seconds += float(np.sum(batch.total_time_s))
+        t_tot = np.median(batch.total_time_s, axis=0)
+        t_mem = np.median(batch.mem_time_s, axis=0)
+        t_cmp = np.median(batch.compute_time_s, axis=0)
+        steps = np.maximum(batch.grid_steps, 1)
+        buffers = np.minimum(
+            hw.vmem_bytes // np.maximum(batch.vmem_stage_bytes, 1),
+            max_stages)
+        skeleton = np.where(buffers >= 2, np.maximum(t_mem, t_cmp),
+                            t_mem + t_cmp)
+        ovh = np.maximum((t_tot - skeleton) / steps, 1e-9)
+        for d, v in D.items():
+            col_blocks[d].append(np.full(n, int(v), dtype=np.int64))
+        for p in spec.program_params:
+            col_blocks[p].append(table[p])
+        met_blocks["total_time_s"].append(t_tot)
+        met_blocks["mem_step"].append(t_mem / steps)
+        met_blocks["cmp_step"].append(t_cmp / steps)
+        met_blocks["ovh_step"].append(ovh)
+        steps_blocks.append(steps)
+        stage_blocks.append(batch.vmem_stage_bytes)
+
+    def _cat(blocks, dtype=None):
+        if not blocks:
+            return np.empty(0, dtype=dtype or np.float64)
+        return np.concatenate(blocks)
+
     return CollectedData(
         spec_name=spec.name,
-        samples=samples,
+        data_params=tuple(spec.data_params),
+        program_params=tuple(spec.program_params),
+        columns={v: _cat(col_blocks[v], np.int64) for v in all_vars},
+        metrics={m: _cat(met_blocks[m]) for m in METRIC_COLUMNS},
+        grid_steps=_cat(steps_blocks, np.int64),
+        vmem_stage_bytes=_cat(stage_blocks, np.int64),
         n_probe_executions=n_exec,
         probe_device_seconds=device_seconds,
         collect_wall_seconds=time.perf_counter() - t0,

@@ -26,7 +26,8 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 __all__ = [
-    "HardwareParams", "V5E", "V5P", "ProbeRecord", "DeviceModel",
+    "HardwareParams", "V5E", "V5P", "ProbeRecord", "ProbeBatch",
+    "DeviceModel", "KernelTraffic", "TrafficTable", "TrafficOperand",
     "V5eSimulator", "InterpretTimer",
 ]
 
@@ -96,14 +97,67 @@ class ProbeRecord:
     counters: dict[str, float] = dataclasses.field(default_factory=dict)
 
 
+@dataclass
+class ProbeBatch:
+    """Struct-of-arrays probe results for a whole candidate table.
+
+    Each timing field has shape ``(repeats, n_configs)``; the per-config
+    workload descriptors (``grid_steps``, ``vmem_stage_bytes``) have shape
+    ``(n_configs,)``.  This is what ``collect`` consumes to derive per-step
+    metric targets in one ndarray pass.
+    """
+
+    total_time_s: np.ndarray
+    mem_time_s: np.ndarray
+    compute_time_s: np.ndarray
+    grid_steps: np.ndarray
+    vmem_stage_bytes: np.ndarray
+
+    @property
+    def n_executions(self) -> int:
+        return int(self.total_time_s.size)
+
+
 class DeviceModel:
     """Opaque device oracle interface (what CUPTI+GPU is in the paper)."""
 
     hw: HardwareParams
 
+    def fingerprint(self) -> dict:
+        """JSON-able identity of this oracle, folded into driver-cache keys:
+        probing a different oracle must not hit another oracle's artifacts."""
+        return {"class": type(self).__name__}
+
     def probe(self, workload: "KernelTraffic", rng: np.random.RandomState
               ) -> ProbeRecord:
         raise NotImplementedError
+
+    def probe_batch(self, table: "TrafficTable",
+                    rng: np.random.RandomState,
+                    repeats: int = 1) -> ProbeBatch:
+        """Probe every launch in ``table`` ``repeats`` times.
+
+        Generic fallback: one ``probe`` call per (repeat, config).  Backends
+        with vectorized physics (``V5eSimulator``) override this with a
+        single ndarray pass over the whole table.
+        """
+        n = len(table)
+        tot = np.empty((repeats, n))
+        mem = np.empty((repeats, n))
+        cmp_ = np.empty((repeats, n))
+        for i in range(n):
+            w = table.row(i)
+            for r in range(repeats):
+                rec = self.probe(w, rng)
+                tot[r, i] = rec.total_time_s
+                mem[r, i] = rec.mem_time_s
+                cmp_[r, i] = rec.compute_time_s
+        return ProbeBatch(tot, mem, cmp_, np.asarray(table.grid_steps),
+                          np.asarray(table.vmem_stage_bytes))
+
+    def true_time_batch(self, table: "TrafficTable") -> np.ndarray:
+        raise NotImplementedError(
+            f"{type(self).__name__} has no noise-free batched oracle")
 
 
 @dataclass
@@ -122,6 +176,56 @@ class KernelTraffic:
     vmem_stage_bytes: int
     # Fraction of FLOPs that go to the MXU (matmul) vs the VPU (elementwise).
     mxu_fraction: float = 1.0
+
+
+@dataclass
+class TrafficOperand:
+    """Columnar per-operand traffic for a whole candidate table.
+
+    ``shapes`` is (n_configs, ndim): one tile shape per config.  ``fetches``
+    is (n_configs,): HBM fetch counts already accounting for block residency.
+    """
+
+    name: str
+    shapes: np.ndarray
+    fetches: np.ndarray
+    dtype_bytes: int
+    is_output: bool
+
+
+@dataclass
+class TrafficTable:
+    """Struct-of-arrays analogue of ``KernelTraffic`` over many configs.
+
+    One data size D, ``n`` candidate configurations: every field is an
+    ndarray over the config axis so device oracles can evaluate the whole
+    table without a Python loop (the batched face of Section IV step 1).
+    """
+
+    grid_steps: np.ndarray          # (n,) int64
+    flops_total: np.ndarray         # (n,) float64
+    operands: list[TrafficOperand]
+    vmem_stage_bytes: np.ndarray    # (n,) int64
+    mxu_fraction: float = 1.0
+
+    def __len__(self) -> int:
+        return int(self.grid_steps.shape[0])
+
+    def row(self, i: int) -> KernelTraffic:
+        """Scalar KernelTraffic view of config ``i`` (generic-probe fallback)."""
+        tiles_in, tiles_out = [], []
+        for op in self.operands:
+            rec = (tuple(int(d) for d in op.shapes[i]),
+                   int(op.fetches[i]), op.dtype_bytes)
+            (tiles_out if op.is_output else tiles_in).append(rec)
+        return KernelTraffic(
+            grid_steps=int(self.grid_steps[i]),
+            flops_total=float(self.flops_total[i]),
+            tiles_in=tiles_in,
+            tiles_out=tiles_out,
+            vmem_stage_bytes=int(self.vmem_stage_bytes[i]),
+            mxu_fraction=self.mxu_fraction,
+        )
 
 
 def _padded_tile_bytes(shape: tuple[int, ...], dtype_bytes: int,
@@ -161,6 +265,10 @@ class V5eSimulator(DeviceModel):
         self.hw = hw
         self.noise = noise
         self._seed = seed
+
+    def fingerprint(self) -> dict:
+        return {"class": type(self).__name__, "hw": self.hw.name,
+                "noise": self.noise, "seed": self._seed}
 
     # -- hidden physics ------------------------------------------------------
     def _dma_eff(self, transfer_bytes: float) -> float:
@@ -208,6 +316,66 @@ class V5eSimulator(DeviceModel):
             total = t_mem + t_cmp + t_ovh  # no double buffering: serialized
         return total, t_mem, t_cmp
 
+    # -- vectorized hidden physics (same formulas, whole table at once) ------
+    def _padded_tile_bytes_batch(self, shapes: np.ndarray,
+                                 dtype_bytes: int) -> np.ndarray:
+        """(n, ndim) tile shapes -> (n,) padded VMEM footprints in bytes."""
+        dims = np.asarray(shapes, dtype=np.float64).copy()
+        hw = self.hw
+        dims[:, -1] = np.ceil(dims[:, -1] / hw.lanes) * hw.lanes
+        if dims.shape[1] >= 2:
+            sl = hw.sublanes(dtype_bytes)
+            dims[:, -2] = np.ceil(dims[:, -2] / sl) * sl
+        return np.prod(dims, axis=1) * dtype_bytes
+
+    def _mxu_eff_batch(self, t: TrafficTable) -> np.ndarray:
+        inputs = [op for op in t.operands if not op.is_output]
+        if not inputs:
+            return np.full(len(t), 0.6)
+        shape = np.asarray(inputs[0].shapes, dtype=np.float64)[:, -2:]
+        d = float(self.hw.mxu_dim)
+        eff = np.ones(shape.shape[0])
+        for j in range(shape.shape[1]):
+            dim = shape[:, j]
+            frac_fill = np.minimum(dim, d) / d
+            pad = dim / (np.ceil(dim / d) * d)
+            eff = eff * (0.25 + 0.75 * frac_fill) * pad
+        return np.maximum(eff, 0.05)
+
+    def _times_batch(self, t: TrafficTable
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        hw = self.hw
+        n = len(t)
+        mem_bytes = np.zeros(n)
+        weighted_eff = np.zeros(n)
+        for op in t.operands:
+            tb = self._padded_tile_bytes_batch(op.shapes, op.dtype_bytes)
+            b = tb * np.asarray(op.fetches, dtype=np.float64)
+            mem_bytes += b
+            weighted_eff += b * self._dma_eff(tb)
+        dma_eff = np.where(mem_bytes > 0, weighted_eff / np.maximum(mem_bytes, 1.0),
+                           1.0)
+        t_mem = mem_bytes / (hw.hbm_bw * dma_eff)
+        peak = hw.peak_flops_bf16 * t.mxu_fraction + \
+            (hw.peak_flops_bf16 / 8.0) * (1.0 - t.mxu_fraction)
+        t_cmp = np.asarray(t.flops_total, dtype=np.float64) / \
+            (peak * self._mxu_eff_batch(t))
+        t_ovh = np.asarray(t.grid_steps, dtype=np.float64) * 1.1e-6
+        return t_mem, t_cmp, t_ovh
+
+    def _total_batch(self, t: TrafficTable
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        t_mem, t_cmp, t_ovh = self._times_batch(t)
+        stage = np.maximum(np.asarray(t.vmem_stage_bytes, dtype=np.float64), 1.0)
+        buffers = np.floor(self.hw.vmem_bytes / stage)
+        steps = np.maximum(np.asarray(t.grid_steps, dtype=np.float64), 1.0)
+        fill = t_mem / steps
+        overlapped = (np.maximum(t_mem, t_cmp) + 0.08 * np.minimum(t_mem, t_cmp)
+                      + fill + t_ovh)
+        serialized = t_mem + t_cmp + t_ovh
+        total = np.where(buffers >= 2, overlapped, serialized)
+        return total, t_mem, t_cmp
+
     # -- oracle interface ------------------------------------------------------
     def probe(self, workload: KernelTraffic,
               rng: np.random.RandomState | None = None) -> ProbeRecord:
@@ -222,11 +390,36 @@ class V5eSimulator(DeviceModel):
             vmem_stage_bytes=workload.vmem_stage_bytes,
         )
 
+    def probe_batch(self, table: TrafficTable,
+                    rng: np.random.RandomState | None = None,
+                    repeats: int = 1) -> ProbeBatch:
+        """One ndarray pass over the whole candidate table, then noise.
+
+        Replaces ``repeats * n_configs`` scalar probe calls with a single
+        evaluation of the hidden physics plus one lognormal draw per
+        (field, repeat, config).
+        """
+        rng = rng or np.random.RandomState(self._seed)
+        total, t_mem, t_cmp = self._total_batch(table)
+        n = len(table)
+        noise = np.exp(rng.normal(0.0, self.noise, size=(3, repeats, n)))
+        return ProbeBatch(
+            total_time_s=total[None, :] * noise[0],
+            mem_time_s=t_mem[None, :] * noise[1],
+            compute_time_s=t_cmp[None, :] * noise[2],
+            grid_steps=np.asarray(table.grid_steps),
+            vmem_stage_bytes=np.asarray(table.vmem_stage_bytes),
+        )
+
     def true_time(self, workload: KernelTraffic) -> float:
         """Noise-free time -- used ONLY by evaluation harnesses (the
         'exhaustive search ground truth' column of Table I), never by the
         fitter."""
         return self._total(workload)[0]
+
+    def true_time_batch(self, table: TrafficTable) -> np.ndarray:
+        """Noise-free times for every config in the table (evaluation only)."""
+        return self._total_batch(table)[0]
 
 
 class InterpretTimer(DeviceModel):

@@ -6,8 +6,12 @@ launch -- the IO-builder contract of Section V-C: data parameter values in,
 six integers (grid + block) out; here, the BlockSpec tile dict out.
 
 A process-wide registry maps kernel-spec names to built drivers so that model
-code can ask for tuned launch parameters with one call.  Decisions are
-memoized both inside the generated module (its _HISTORY table) and here.
+code can ask for tuned launch parameters with one call.  The registry *reads
+through* the persistent driver-artifact cache (core/cache.py): a driver built
+by any earlier process is loaded from disk on first use instead of being
+rebuilt -- the warm-start path that lets serving fleets share tuning work.
+Decisions are memoized both inside the generated module (its _HISTORY table)
+and here.
 """
 
 from __future__ import annotations
@@ -16,11 +20,13 @@ import threading
 from dataclasses import dataclass, field
 from typing import Mapping
 
+import numpy as np
+
 from .codegen import compile_driver_module
 from .device_model import HardwareParams, V5E
 
 __all__ = ["DriverProgram", "registry", "register_driver", "get_driver",
-           "choose_or_default"]
+           "choose_or_default", "warm_start_from_cache"]
 
 Dims = Mapping[str, int]
 
@@ -42,7 +48,14 @@ class DriverProgram:
     def estimate(self, D: Dims, P: Dims) -> float:
         return float(self.namespace["estimate"](**{**D, **P}))
 
-    def candidates(self, D: Dims) -> list[tuple[int, ...]]:
+    def estimate_batch(self, D: Dims,
+                       columns: Mapping[str, np.ndarray]) -> np.ndarray:
+        """Vectorized E over a columnar candidate table: one ndarray pass."""
+        est = self.namespace["estimate"](**{**D, **columns})
+        return np.asarray(est, dtype=np.float64)
+
+    def candidates(self, D: Dims) -> dict[str, np.ndarray]:
+        """Columnar feasible table: one int64 ndarray per program param."""
         return self.namespace["candidates"](**D)
 
     # -- steps 5-6: selection (memoized) --------------------------------------
@@ -65,18 +78,32 @@ class _Registry:
 
     def __init__(self) -> None:
         self._drivers: dict[str, DriverProgram] = {}
+        self._cache_misses: set[tuple[str, str]] = set()
         self._lock = threading.Lock()
 
     def register(self, driver: DriverProgram) -> None:
         with self._lock:
             self._drivers[driver.kernel] = driver
+            self._cache_misses = {k for k in self._cache_misses
+                                  if k[0] != driver.kernel}
 
     def get(self, kernel: str) -> DriverProgram | None:
         return self._drivers.get(kernel)
 
+    # Negative memo for the disk read-through: an untuned kernel must cost
+    # one dict lookup per launch, not filesystem I/O.  Keyed by (kernel,
+    # hw name) since the cache lookup is hardware-scoped.
+    def note_cache_miss(self, kernel: str, hw_name: str) -> None:
+        with self._lock:
+            self._cache_misses.add((kernel, hw_name))
+
+    def known_cache_miss(self, kernel: str, hw_name: str) -> bool:
+        return (kernel, hw_name) in self._cache_misses
+
     def clear(self) -> None:
         with self._lock:
             self._drivers.clear()
+            self._cache_misses.clear()
 
     def kernels(self) -> list[str]:
         return sorted(self._drivers)
@@ -89,22 +116,74 @@ def register_driver(driver: DriverProgram) -> None:
     registry.register(driver)
 
 
-def get_driver(kernel: str) -> DriverProgram | None:
-    return registry.get(kernel)
+def get_driver(kernel: str, read_cache: bool = True,
+               hw: HardwareParams = V5E) -> DriverProgram | None:
+    """Registered driver for ``kernel``; on a registry miss, fall back to the
+    persistent artifact cache (a driver built in another process is loaded,
+    not rebuilt) and register the loaded driver for subsequent calls.
+
+    Only entries tuned for ``hw`` are loaded -- a driver built for another
+    device would silently choose wrong launch parameters.  Disk misses are
+    memoized so untuned kernels stay one dict lookup per launch.
+    """
+    drv = registry.get(kernel)
+    if drv is not None or not read_cache:
+        return drv
+    if registry.known_cache_miss(kernel, hw.name):
+        return None
+    from .cache import default_cache
+
+    entry = default_cache().lookup_latest(kernel, hw_name=hw.name)
+    if entry is None:
+        registry.note_cache_miss(kernel, hw.name)
+        return None
+    drv = DriverProgram.from_source(kernel, entry.source, hw)
+    registry.register(drv)
+    return drv
+
+
+def warm_start_from_cache(kernels: list[str] | None = None,
+                          hw: HardwareParams = V5E) -> list[str]:
+    """Pre-load cached drivers into the registry (serving-process startup).
+
+    ``kernels=None`` loads every kernel present in the cache.  Kernels
+    already registered are left untouched; entries tuned for a different
+    device than ``hw`` are skipped.  Returns the loaded names.
+    """
+    from .cache import default_cache
+
+    cache = default_cache()
+    names = kernels if kernels is not None else cache.kernels()
+    loaded = []
+    for name in names:
+        if registry.get(name) is not None:
+            continue
+        entry = cache.lookup_latest(name, hw_name=hw.name)
+        if entry is None:
+            continue
+        registry.register(DriverProgram.from_source(name, entry.source, hw))
+        loaded.append(name)
+    return loaded
 
 
 def choose_or_default(kernel: str, D: Dims,
-                      default: dict[str, int]) -> dict[str, int]:
-    """Tuned launch parameters if a driver is registered, else ``default``.
+                      default: dict[str, int],
+                      hw: HardwareParams = V5E) -> dict[str, int]:
+    """Tuned launch parameters if a driver is registered or cached, else
+    ``default``.
 
     This keeps model code runnable before any tuning has happened (the
     untuned path uses the static heuristic config, like un-instrumented CUDA
-    uses whatever the programmer hard-coded).
+    uses whatever the programmer hard-coded).  A driver built for different
+    data parameters raises KeyError on the missing names; an infeasible D
+    raises ValueError -- both fall back to the default config rather than
+    crash the untuned path.  ``hw`` scopes the cache read-through: only
+    artifacts tuned for that device warm-start.
     """
-    drv = registry.get(kernel)
+    drv = get_driver(kernel, hw=hw)
     if drv is None:
         return dict(default)
     try:
         return drv.choose(D)
-    except ValueError:
+    except (ValueError, KeyError, TypeError):
         return dict(default)

@@ -25,16 +25,18 @@ here -- they come from probing the device oracle.
 
 from __future__ import annotations
 
-import itertools
 import math
 from dataclasses import dataclass, field
-from typing import Mapping, Sequence
+from typing import Iterator, Mapping, Sequence
 
-from .device_model import HardwareParams, KernelTraffic, V5E
+import numpy as np
+
+from .device_model import (HardwareParams, KernelTraffic, TrafficOperand,
+                           TrafficTable, V5E)
 from .rational_program import Ceil, Const, Expr, Floor, Max, Min, ceil_div, var
 
 __all__ = [
-    "Operand", "GridAxis", "KernelSpec",
+    "Operand", "GridAxis", "KernelSpec", "CandidateTable",
     "matmul_spec", "flash_attention_spec", "moe_gmm_spec", "ssd_scan_spec",
     "POLYBENCH_SUITE", "polybench_suite",
 ]
@@ -42,8 +44,70 @@ __all__ = [
 Dims = Mapping[str, int]
 
 
-def _pad(x: int, m: int) -> int:
+def _pad(x, m):
+    """Round up to a multiple of m (works elementwise on ndarrays)."""
     return ((x + m - 1) // m) * m
+
+
+@dataclass
+class CandidateTable:
+    """Struct-of-arrays feasible configuration set: one column per program
+    parameter.
+
+    This is the columnar contract of the whole pipeline: the enumerator
+    produces it, the device oracles consume it through ``traffic_table``,
+    and the generated drivers evaluate the rational program over it in one
+    ndarray pass (no per-config Python loop anywhere).
+    """
+
+    params: tuple[str, ...]
+    columns: dict[str, np.ndarray]      # each (n,) int64
+
+    def __post_init__(self) -> None:
+        self.columns = {p: np.asarray(c, dtype=np.int64)
+                        for p, c in self.columns.items()}
+
+    def __len__(self) -> int:
+        if not self.params:
+            return 0
+        return int(self.columns[self.params[0]].shape[0])
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def __getitem__(self, param: str) -> np.ndarray:
+        return self.columns[param]
+
+    def row(self, i: int) -> dict[str, int]:
+        return {p: int(self.columns[p][i]) for p in self.params}
+
+    def rows(self) -> Iterator[dict[str, int]]:
+        for i in range(len(self)):
+            yield self.row(i)
+
+    def select(self, index) -> "CandidateTable":
+        """New table keeping rows selected by a boolean mask or index array."""
+        return CandidateTable(
+            self.params, {p: c[index] for p, c in self.columns.items()})
+
+    @classmethod
+    def from_rows(cls, params: Sequence[str],
+                  rows: Sequence[Mapping[str, int]]) -> "CandidateTable":
+        params = tuple(params)
+        return cls(params, {
+            p: np.array([r[p] for r in rows], dtype=np.int64) for p in params})
+
+    @classmethod
+    def product(cls, params: Sequence[str],
+                axes: Sequence[Sequence[int]]) -> "CandidateTable":
+        """Full Cartesian grid over per-parameter candidate values."""
+        params = tuple(params)
+        if not params:
+            return cls(params, {})
+        grids = np.meshgrid(*[np.asarray(a, dtype=np.int64) for a in axes],
+                            indexing="ij")
+        return cls(params, {p: g.reshape(-1)
+                            for p, g in zip(params, grids)})
 
 
 @dataclass(frozen=True)
@@ -192,28 +256,130 @@ class KernelSpec:
             mxu_fraction=self.mxu_fraction,
         )
 
+    # -- batched derivations over a CandidateTable ----------------------------
+    def grid_extents_batch(self, D: Dims,
+                           table: CandidateTable) -> list[np.ndarray]:
+        """Per-axis grid extents, each (n,) int64 over the candidate table."""
+        n = len(table)
+        out = []
+        for a in self.grid:
+            total = D[a.data] if isinstance(a.data, str) else a.data
+            if a.block is None:
+                out.append(np.full(n, int(total), dtype=np.int64))
+            else:
+                out.append(-(-int(total) // table[a.block]))
+        return out
+
+    def grid_steps_batch(self, D: Dims, table: CandidateTable) -> np.ndarray:
+        steps = np.ones(len(table), dtype=np.int64)
+        for e in self.grid_extents_batch(D, table):
+            steps = steps * e
+        return steps
+
+    def _tile_columns(self, op: Operand, D: Dims,
+                      table: CandidateTable) -> np.ndarray:
+        """(n, ndim) tile shapes for one operand over the candidate table."""
+        n = len(table)
+        cols = []
+        for t in op.tile:
+            if isinstance(t, str) and t in table.columns:
+                cols.append(table[t])
+            else:
+                v = D[t] if isinstance(t, str) else int(t)
+                cols.append(np.full(n, int(v), dtype=np.int64))
+        return np.stack(cols, axis=1)
+
+    def vmem_stage_bytes_batch(self, D: Dims, table: CandidateTable,
+                               hw: HardwareParams = V5E) -> np.ndarray:
+        total = np.zeros(len(table), dtype=np.int64)
+        for op in self.operands:
+            dims = self._tile_columns(op, D, table).copy()
+            dims[:, -1] = _pad(dims[:, -1], hw.lanes)
+            if dims.shape[1] >= 2:
+                dims[:, -2] = _pad(dims[:, -2], hw.sublanes(op.dtype_bytes))
+            total = total + np.prod(dims, axis=1) * op.dtype_bytes
+        return total
+
+    def traffic_table(self, D: Dims, table: CandidateTable,
+                      hw: HardwareParams = V5E) -> TrafficTable:
+        """Columnar ``KernelTraffic`` over every config in ``table``."""
+        extents = self.grid_extents_batch(D, table)
+        names = [a.name for a in self.grid]
+        n = len(table)
+        operands = []
+        for op in self.operands:
+            dep_pos = [names.index(d) for d in op.deps if d in names]
+            if not dep_pos:
+                fetches = np.ones(n, dtype=np.int64)
+            else:
+                fetches = np.ones(n, dtype=np.int64)
+                for e in extents[: max(dep_pos) + 1]:
+                    fetches = fetches * e
+            operands.append(TrafficOperand(
+                name=op.name,
+                shapes=self._tile_columns(op, D, table),
+                fetches=fetches,
+                dtype_bytes=op.dtype_bytes,
+                is_output=op.is_output,
+            ))
+        steps = np.ones(n, dtype=np.int64)
+        for e in extents:
+            steps = steps * e
+        flops = 1.0
+        for a in self.grid:
+            flops *= D[a.data] if isinstance(a.data, str) else a.data
+        return TrafficTable(
+            grid_steps=steps,
+            flops_total=np.full(n, self.flops_per_point * flops),
+            operands=operands,
+            vmem_stage_bytes=self.vmem_stage_bytes_batch(D, table, hw),
+            mxu_fraction=self.mxu_fraction,
+        )
+
     # -- feasibility / enumeration (Section IV step 4) -------------------------
     def feasible(self, D: Dims, P: Dims, hw: HardwareParams = V5E) -> bool:
-        env = dict(D)
-        env.update(P)
+        """Scalar feasibility check for a single (D, P) point."""
+        table = CandidateTable.from_rows(self.program_params, [P])
+        return bool(self.feasible_mask(D, table, hw)[0])
+
+    def feasible_mask(self, D: Dims, table: CandidateTable,
+                      hw: HardwareParams = V5E) -> np.ndarray:
+        """Vectorized constraint evaluation: (n,) bool over the table.
+
+        The user-written Python-syntax constraint strings (Section V-A) are
+        evaluated once with ndarray columns bound to the program parameters;
+        a constraint that resists array evaluation falls back to per-row
+        scalar evaluation for just that constraint.
+        """
+        n = len(table)
+        mask = np.ones(n, dtype=bool)
+        env: dict[str, object] = {k: int(v) for k, v in D.items()}
+        env.update(table.columns)
         env["vmem"] = hw.vmem_bytes
-        try:
-            for c in self.constraints:
-                if not eval(c, {"__builtins__": {}, "math": math}, dict(env)):
-                    return False
-        except Exception:
-            return False
+        globs = {"__builtins__": {}, "math": math, "np": np}
+        for c in self.constraints:
+            try:
+                res = eval(c, globs, dict(env))
+                mask &= np.broadcast_to(np.asarray(res, dtype=bool), (n,))
+            except Exception:
+                ok = np.zeros(n, dtype=bool)
+                for i in range(n):
+                    row = {**{k: int(v) for k, v in D.items()},
+                           **table.row(i), "vmem": hw.vmem_bytes}
+                    try:
+                        ok[i] = bool(eval(c, globs, row))
+                    except Exception:
+                        ok[i] = False
+                mask &= ok
         # Built-in constraint: pipeline_buffers stage buffers must fit VMEM
         # (the TPU occupancy analogue of registers/shared-memory limits).
-        stage = self.vmem_stage_bytes(D, P, hw)
-        if stage * self.pipeline_buffers > hw.vmem_bytes:
-            return False
+        stage = self.vmem_stage_bytes_batch(D, table, hw)
+        mask &= stage * self.pipeline_buffers <= hw.vmem_bytes
         # Tiles may not exceed their data extents beyond one padded block.
         for a in self.grid:
             if a.block is not None and isinstance(a.data, str):
-                if P[a.block] > _pad(D[a.data], 8):
-                    return False
-        return True
+                mask &= table[a.block] <= _pad(int(D[a.data]), 8)
+        return mask
 
     def default_candidates(self, param: str, D: Dims) -> tuple[int, ...]:
         if param in self.param_candidates:
@@ -222,17 +388,21 @@ class KernelSpec:
         return tuple(2 ** i for i in range(3, 12))
 
     def candidates(self, D: Dims, hw: HardwareParams = V5E,
-                   limit: int | None = None) -> list[dict[str, int]]:
+                   limit: int | None = None) -> CandidateTable:
+        """Columnar feasible configuration table at data size D.
+
+        Enumerates the Cartesian candidate grid as ndarray columns, applies
+        every constraint as a vectorized mask, and (optionally) subsamples
+        to ``limit`` rows with an even stride.
+        """
         axes = [self.default_candidates(p, D) for p in self.program_params]
-        out = []
-        for combo in itertools.product(*axes):
-            P = dict(zip(self.program_params, combo))
-            if self.feasible(D, P, hw):
-                out.append(P)
-        if limit is not None and len(out) > limit:
-            stride = len(out) / limit
-            out = [out[int(i * stride)] for i in range(limit)]
-        return out
+        table = CandidateTable.product(self.program_params, axes)
+        table = table.select(self.feasible_mask(D, table, hw))
+        if limit is not None and len(table) > limit:
+            stride = len(table) / limit
+            idx = (np.arange(limit) * stride).astype(np.int64)
+            table = table.select(idx)
+        return table
 
     def metric_fit_vars(self, metric: str) -> tuple[str, ...]:
         if metric in self.fit_vars:

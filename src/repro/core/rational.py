@@ -16,7 +16,17 @@ import numpy as np
 
 from .polynomial import Polynomial, monomial_exponents
 
-__all__ = ["RationalFunction"]
+__all__ = ["RationalFunction", "clamp_from_zero"]
+
+
+def clamp_from_zero(x: np.ndarray, eps: float = 1e-300) -> np.ndarray:
+    """Sign-preserving clamp away from zero: |x| < eps -> copysign(eps, x).
+
+    Shared guard for near-zero denominators (rational-function evaluation
+    and the expression IR's division node): a tiny negative denominator must
+    stay negative -- flipping it would negate the whole quotient.
+    """
+    return np.where(np.abs(x) < eps, np.copysign(eps, x), x)
 
 
 @dataclass
@@ -31,7 +41,7 @@ class RationalFunction:
         # Guard against near-zero denominators: the fitter rejects candidates
         # whose denominator changes sign on the sample domain, but evaluation
         # outside that domain (extrapolation) can still come close to a pole.
-        den = np.where(np.abs(den) < 1e-300, np.sign(den) * 1e-300 + 1e-300, den)
+        den = clamp_from_zero(den)
         return num / den
 
     def eval_dict(self, values: dict[str, float]) -> float:

@@ -32,7 +32,7 @@ from typing import Callable, Iterable, Mapping
 
 import numpy as np
 
-from .rational import RationalFunction
+from .rational import RationalFunction, clamp_from_zero
 
 __all__ = [
     "Expr", "Var", "Const", "BinOp", "Floor", "Ceil", "Min", "Max",
@@ -64,7 +64,15 @@ class Expr:
     def eval(self, env: Env) -> np.ndarray:
         raise NotImplementedError
 
-    def to_source(self) -> str:
+    def to_source(self, vector: bool = False) -> str:
+        """Python source for this expression.
+
+        ``vector=False`` emits scalar code (``math.floor``, ``min``, ternary
+        conditionals) depending only on ``math``; ``vector=True`` emits
+        ndarray-safe code (``np.floor``, ``np.minimum``, ``np.where``)
+        depending only on ``numpy as np`` -- the form the generated drivers
+        use to evaluate the rational program over a whole candidate table.
+        """
         raise NotImplementedError
 
     def children(self) -> Iterable["Expr"]:
@@ -107,7 +115,7 @@ class Var(Expr):
     def eval(self, env: Env) -> np.ndarray:
         return np.asarray(env[self.name], dtype=np.float64)
 
-    def to_source(self) -> str:
+    def to_source(self, vector: bool = False) -> str:
         return self.name
 
 
@@ -118,7 +126,7 @@ class Const(Expr):
     def eval(self, env: Env) -> np.ndarray:
         return np.float64(self.value)
 
-    def to_source(self) -> str:
+    def to_source(self, vector: bool = False) -> str:
         return repr(float(self.value))
 
 
@@ -137,12 +145,13 @@ class BinOp(Expr):
     def eval(self, env: Env) -> np.ndarray:
         l, r = self.lhs.eval(env), self.rhs.eval(env)
         if self.op == "/":
-            r = np.where(np.abs(r) < 1e-300, 1e-300, r)
+            r = clamp_from_zero(r)
         out = _OPS[self.op](l, r)
         return out.astype(np.float64) if out.dtype == bool else out
 
-    def to_source(self) -> str:
-        return f"({self.lhs.to_source()} {self.op} {self.rhs.to_source()})"
+    def to_source(self, vector: bool = False) -> str:
+        return (f"({self.lhs.to_source(vector)} {self.op} "
+                f"{self.rhs.to_source(vector)})")
 
     def children(self):
         return (self.lhs, self.rhs)
@@ -155,7 +164,9 @@ class Floor(Expr):
     def eval(self, env: Env) -> np.ndarray:
         return np.floor(self.arg.eval(env))
 
-    def to_source(self) -> str:
+    def to_source(self, vector: bool = False) -> str:
+        if vector:
+            return f"np.floor({self.arg.to_source(vector)})"
         return f"math.floor({self.arg.to_source()})"
 
     def children(self):
@@ -169,7 +180,9 @@ class Ceil(Expr):
     def eval(self, env: Env) -> np.ndarray:
         return np.ceil(self.arg.eval(env))
 
-    def to_source(self) -> str:
+    def to_source(self, vector: bool = False) -> str:
+        if vector:
+            return f"np.ceil({self.arg.to_source(vector)})"
         return f"math.ceil({self.arg.to_source()})"
 
     def children(self):
@@ -184,7 +197,10 @@ class Min(Expr):
     def eval(self, env: Env) -> np.ndarray:
         return np.minimum(self.lhs.eval(env), self.rhs.eval(env))
 
-    def to_source(self) -> str:
+    def to_source(self, vector: bool = False) -> str:
+        if vector:
+            return (f"np.minimum({self.lhs.to_source(vector)}, "
+                    f"{self.rhs.to_source(vector)})")
         return f"min({self.lhs.to_source()}, {self.rhs.to_source()})"
 
     def children(self):
@@ -199,7 +215,10 @@ class Max(Expr):
     def eval(self, env: Env) -> np.ndarray:
         return np.maximum(self.lhs.eval(env), self.rhs.eval(env))
 
-    def to_source(self) -> str:
+    def to_source(self, vector: bool = False) -> str:
+        if vector:
+            return (f"np.maximum({self.lhs.to_source(vector)}, "
+                    f"{self.rhs.to_source(vector)})")
         return f"max({self.lhs.to_source()}, {self.rhs.to_source()})"
 
     def children(self):
@@ -219,7 +238,11 @@ class Select(Expr):
         return np.where(c.astype(bool), self.if_true.eval(env),
                         self.if_false.eval(env))
 
-    def to_source(self) -> str:
+    def to_source(self, vector: bool = False) -> str:
+        if vector:
+            return (f"np.where({self.cond.to_source(vector)}, "
+                    f"{self.if_true.to_source(vector)}, "
+                    f"{self.if_false.to_source(vector)})")
         return (f"({self.if_true.to_source()} if {self.cond.to_source()} "
                 f"else {self.if_false.to_source()})")
 
@@ -245,7 +268,7 @@ class Fitted(Expr):
         X = np.stack([c.ravel() for c in cols], axis=-1)
         return self.fn(X).reshape(shape) if shape else self.fn(X)[0]
 
-    def to_source(self) -> str:
+    def to_source(self, vector: bool = False) -> str:
         return self.fn.to_source()
 
     def children(self):

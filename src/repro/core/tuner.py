@@ -2,29 +2,35 @@
 
 ``Klaraptor.build_driver`` runs the three compile-time steps of Section IV
 (collect -> fit -> codegen) for one kernel spec against a device oracle and
-returns a ready ``DriverProgram``.
+returns a ready ``DriverProgram``.  Builds write through the persistent
+driver-artifact cache (core/cache.py): a second process asking for the same
+(spec, hardware, fit hyperparameters) gets the stored driver back without
+probing the device at all.
 
 ``exhaustive_search`` is the paper's comparison baseline (Table I "Best
-Config." column): probe *every* feasible configuration at the actual data
-size and take the argmin of true execution time.  ``selection_ratio`` scores
-a driver the way Fig. 1 does: best_time / chosen_time (>= 0.85 is "good").
+Config." column): evaluate *every* feasible configuration at the actual data
+size -- in one batched oracle pass over the candidate table -- and take the
+argmin of true execution time.  ``selection_ratio`` scores a driver the way
+Fig. 1 does: best_time / chosen_time (>= 0.85 is "good").
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Mapping, Sequence
 
 import numpy as np
 
+from .cache import CacheEntry, DriverCache, cache_key, default_cache
 from .codegen import generate_driver_source
-from .collect import CollectedData, collect, default_probe_data
+from .collect import CollectedData, collect
 from .device_model import DeviceModel, HardwareParams, V5E, V5eSimulator
 from .driver import DriverProgram, register_driver
 from .fitting import FitResult, fit_auto
 from .kernel_spec import KernelSpec
 from .perf_model import LOW_LEVEL_METRICS, build_time_program
+from .rational import RationalFunction
 
 __all__ = ["BuildResult", "Klaraptor", "exhaustive_search", "selection_ratio"]
 
@@ -38,9 +44,11 @@ class BuildResult:
     collected: CollectedData
     build_wall_seconds: float
     probe_device_seconds: float
+    from_cache: bool = False
 
     def fit_report(self) -> str:
-        lines = [f"driver build for {self.driver.kernel}:"]
+        origin = " (cached)" if self.from_cache else ""
+        lines = [f"driver build for {self.driver.kernel}{origin}:"]
         for m, f in self.fits.items():
             lines.append(
                 f"  {m}: deg(num)={f.num_bounds} deg(den)={f.den_bounds} "
@@ -53,13 +61,49 @@ class BuildResult:
         return "\n".join(lines)
 
 
+def _fits_to_json(fits: dict[str, FitResult]) -> dict:
+    return {m: {
+        "function": f.function.to_json(),
+        "rel_error": f.rel_error,
+        "cv_error": f.cv_error,
+        "num_bounds": list(f.num_bounds),
+        "den_bounds": list(f.den_bounds),
+        "n_params": f.n_params,
+        "condition_number": f.condition_number,
+    } for m, f in fits.items()}
+
+
+def _fits_from_json(raw: dict) -> dict[str, FitResult]:
+    out = {}
+    for m, f in raw.items():
+        out[m] = FitResult(
+            function=RationalFunction.from_json(f["function"]),
+            rel_error=f["rel_error"],
+            cv_error=f["cv_error"],
+            num_bounds=tuple(f["num_bounds"]),
+            den_bounds=tuple(f["den_bounds"]),
+            n_params=f["n_params"],
+            condition_number=f["condition_number"],
+        )
+    return out
+
+
 class Klaraptor:
     """The tool: compile-time driver construction + runtime selection."""
 
     def __init__(self, device: DeviceModel | None = None,
-                 hw: HardwareParams = V5E):
+                 hw: HardwareParams = V5E,
+                 cache: DriverCache | None | bool = None):
         self.device = device or V5eSimulator(hw)
         self.hw = hw
+        # cache=False disables persistence; None selects the default store.
+        self.cache: DriverCache | None
+        if cache is False:
+            self.cache = None
+        elif cache is None or cache is True:
+            self.cache = default_cache()
+        else:
+            self.cache = cache
 
     def build_driver(
         self,
@@ -71,8 +115,39 @@ class Klaraptor:
         register: bool = True,
         max_num_degree: int = 2,
         max_den_degree: int = 2,
+        use_cache: bool = True,
     ) -> BuildResult:
         t0 = time.perf_counter()
+        hyper = {
+            "repeats": repeats,
+            "max_configs_per_size": max_configs_per_size,
+            "seed": seed,
+            "max_num_degree": max_num_degree,
+            "max_den_degree": max_den_degree,
+            "probe_data": [sorted(d.items()) for d in probe_data]
+            if probe_data is not None else None,
+            # probing a different oracle (other device class, other
+            # simulator noise/seed) must not hit this build's artifact
+            "device": self.device.fingerprint(),
+        }
+        key = cache_key(spec, self.hw, hyper) if self.cache else None
+
+        if self.cache is not None and use_cache and key is not None:
+            entry = self.cache.get(spec.name, key)
+            if entry is not None:
+                driver = DriverProgram.from_source(
+                    spec.name, entry.source, self.hw)
+                if register:
+                    register_driver(driver)
+                return BuildResult(
+                    driver=driver,
+                    fits=_fits_from_json(entry.fits),
+                    collected=CollectedData.empty(spec, **entry.stats),
+                    build_wall_seconds=time.perf_counter() - t0,
+                    probe_device_seconds=0.0,
+                    from_cache=True,
+                )
+
         data = collect(
             spec, self.device,
             probe_data=probe_data, hw=self.hw, repeats=repeats,
@@ -94,6 +169,8 @@ class Klaraptor:
         driver = DriverProgram.from_source(spec.name, source, self.hw)
         if register:
             register_driver(driver)
+        if self.cache is not None and key is not None:
+            self._cache_put(spec, key, source, fits, data)
         return BuildResult(
             driver=driver,
             fits=fits,
@@ -101,6 +178,27 @@ class Klaraptor:
             build_wall_seconds=time.perf_counter() - t0,
             probe_device_seconds=data.probe_device_seconds,
         )
+
+    def _cache_put(self, spec: KernelSpec, key: str, source: str,
+                   fits: dict[str, FitResult], data: CollectedData) -> None:
+        # Persistence is best-effort: an unwritable cache dir (read-only
+        # serving node) must not fail the build itself.
+        try:
+            self.cache.put(CacheEntry(
+                kernel=spec.name,
+                key=key,
+                source=source,
+                fits=_fits_to_json(fits),
+                stats={
+                    "n_probe_executions": data.n_probe_executions,
+                    "probe_device_seconds": data.probe_device_seconds,
+                    "collect_wall_seconds": data.collect_wall_seconds,
+                },
+                created_at=time.time(),
+                hw_name=self.hw.name,
+            ))
+        except OSError:
+            pass
 
 
 def exhaustive_search(
@@ -111,22 +209,18 @@ def exhaustive_search(
 ) -> tuple[dict[str, int], float, int, float]:
     """Ground-truth argmin over every feasible config at data size D.
 
-    Returns (best_P, best_time, n_evaluations, total_device_seconds).
+    One batched oracle evaluation over the whole candidate table (no inner
+    loop).  Returns (best_P, best_time, n_evaluations, total_device_seconds).
     total_device_seconds is what an actual exhaustive search would spend
     running the kernel -- the Fig. 3 cost of the baseline.
     """
-    best_P: dict[str, int] | None = None
-    best_t = float("inf")
-    total = 0.0
-    cands = spec.candidates(D, hw)
-    for P in cands:
-        t = device.true_time(spec.traffic(D, P, hw))
-        total += t
-        if t < best_t:
-            best_t, best_P = t, dict(P)
-    if best_P is None:
+    table = spec.candidates(D, hw)
+    if not len(table):
         raise ValueError(f"no feasible configuration for {spec.name} at {D}")
-    return best_P, best_t, len(cands), total
+    times = device.true_time_batch(spec.traffic_table(D, table, hw))
+    best = int(np.argmin(times))
+    return (table.row(best), float(times[best]), len(table),
+            float(np.sum(times)))
 
 
 def selection_ratio(

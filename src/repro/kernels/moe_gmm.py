@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across versions; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 __all__ = ["moe_gmm_pallas"]
 
 
@@ -65,7 +69,7 @@ def moe_gmm_pallas(
         out_specs=pl.BlockSpec((1, bg, bn), lambda ex, i, j, l: (ex, i, j)),
         out_shape=jax.ShapeDtypeStruct((e, g, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((bg, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

@@ -10,6 +10,12 @@ Because JAX shapes are static at trace time, the "launch" moment is trace
 time: one decision per distinct shape, memoized in the driver's history
 table, re-used by every execution of the compiled program -- the natural TPU
 analogue of the paper's per-invocation decision with its runtime history.
+
+``choose_or_default`` reads through the persistent driver-artifact cache
+(core/cache.py): a driver tuned by any earlier process is loaded from disk on
+first use, so these ops warm-start with tuned launch parameters even in a
+process that never ran the tuner.  Inside the loaded driver the decision is
+one vectorized rational-program evaluation over the whole candidate table.
 """
 
 from __future__ import annotations

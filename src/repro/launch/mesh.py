@@ -11,18 +11,25 @@ import jax
 __all__ = ["make_production_mesh", "make_mesh", "mesh_chips"]
 
 
+def _make(shape: tuple[int, ...], axes: tuple[str, ...]):
+    # axis_types / AxisType only exist on newer jax; older versions default
+    # to the same (auto) behavior.
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod ("data", "model"); 2 pods adds an outer "pod"
     data-parallel axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def mesh_chips(mesh) -> int:

@@ -10,7 +10,10 @@ batching property.
 
 Inside each decode step the KLARAPTOR drivers pick kernel launch parameters
 for the current shapes (once, then memoized) -- the serving-side face of the
-paper's "optimal values ... for each kernel launch independently".
+paper's "optimal values ... for each kernel launch independently".  At
+startup the engine warm-starts every tuned driver found in the persistent
+artifact cache (core/cache.py), so a fleet of serving processes shares one
+tuning run instead of each re-deriving launch parameters.
 """
 
 from __future__ import annotations
@@ -21,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.driver import warm_start_from_cache
 from repro.serving.sampling import greedy, sample
 
 __all__ = ["Request", "ServingEngine"]
@@ -38,7 +42,7 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model, params, sharder, batch: int, max_seq: int,
-                 eos_id: int = 1, seed: int = 0):
+                 eos_id: int = 1, seed: int = 0, warm_start: bool = True):
         self.model = model
         self.params = params
         self.sharder = sharder
@@ -46,6 +50,10 @@ class ServingEngine:
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
+        # Load tuned drivers persisted by earlier tuning/serving processes so
+        # the first decode step already launches with optimal parameters.
+        self.warm_started: list[str] = \
+            warm_start_from_cache() if warm_start else []
 
         self.cache = model.init_cache(batch, max_seq)
         self.slot_req: list[Request | None] = [None] * batch

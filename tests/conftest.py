@@ -15,6 +15,20 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _isolated_driver_cache(tmp_path_factory):
+    """Point the persistent driver-artifact cache at a session-local tmp dir
+    so tests never read or pollute the user's ~/.cache/klaraptor."""
+    d = tmp_path_factory.mktemp("klaraptor-cache")
+    old = os.environ.get("KLARAPTOR_CACHE_DIR")
+    os.environ["KLARAPTOR_CACHE_DIR"] = str(d)
+    yield str(d)
+    if old is None:
+        os.environ.pop("KLARAPTOR_CACHE_DIR", None)
+    else:
+        os.environ["KLARAPTOR_CACHE_DIR"] = old
+
+
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 240) -> str:
     """Run a python snippet in a subprocess with fake XLA devices.
 

@@ -1,0 +1,163 @@
+"""Driver-artifact cache tests: hit, miss, stale-hash invalidation, and the
+cross-process warm start (a driver built in one process is loaded -- not
+rebuilt -- by a fresh process via choose_or_default)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (DriverCache, Klaraptor, V5eSimulator, cache_key,
+                        matmul_spec)
+from repro.core.driver import registry, warm_start_from_cache
+
+SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+@pytest.fixture()
+def cache_dir(tmp_path, monkeypatch):
+    d = tmp_path / "cache"
+    monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(d))
+    registry.clear()
+    yield str(d)
+    registry.clear()
+
+
+def _build(register=False, **kw):
+    sim = V5eSimulator(noise=0.03, seed=5)
+    kl = Klaraptor(sim)
+    return kl, kl.build_driver(matmul_spec(), repeats=2,
+                               max_configs_per_size=16, register=register,
+                               **kw)
+
+
+class TestCacheStore:
+    def test_miss_then_hit(self, cache_dir):
+        kl, first = _build()
+        assert not first.from_cache
+        assert first.collected.n_probe_executions > 0
+        # identical build inputs: second build must come from the store,
+        # probe nothing, and produce the identical driver program
+        kl2, second = _build()
+        assert second.from_cache
+        assert second.probe_device_seconds == 0.0
+        assert second.driver.source == first.driver.source
+        D = {"m": 4096, "n": 4096, "k": 4096}
+        assert second.driver.choose(D) == first.driver.choose(D)
+        # fitted functions survive serialization
+        for m, f in second.fits.items():
+            assert np.isfinite(f.rel_error), m
+
+    def test_changed_hyperparams_miss(self, cache_dir):
+        _build()
+        _, rebuilt = _build(seed=123)
+        assert not rebuilt.from_cache
+
+    def test_changed_spec_misses(self, cache_dir):
+        _build()
+        spec = matmul_spec()
+        spec.constraints = spec.constraints + ("bm <= 512",)
+        sim = V5eSimulator(noise=0.03, seed=5)
+        res = Klaraptor(sim).build_driver(spec, repeats=2,
+                                          max_configs_per_size=16,
+                                          register=False)
+        assert not res.from_cache
+
+    def test_stale_hash_invalidation(self, cache_dir):
+        kl, first = _build()
+        cache = DriverCache()
+        key = cache_key(matmul_spec(), kl.hw, {
+            "repeats": 2, "max_configs_per_size": 16, "seed": 0,
+            "max_num_degree": 2, "max_den_degree": 2, "probe_data": None,
+            "device": kl.device.fingerprint()})
+        path = cache.path("matmul_b16", key)
+        assert os.path.exists(path), "build must write through the cache"
+        # tamper with the stored artifact: content hash no longer matches
+        raw = json.load(open(path))
+        raw["source"] = raw["source"] + "\n# tampered\n"
+        json.dump(raw, open(path, "w"))
+        assert cache.get("matmul_b16", key) is None
+        assert not os.path.exists(path), "stale entry must be evicted"
+        # next build treats it as a miss and rebuilds cleanly
+        _, rebuilt = _build()
+        assert not rebuilt.from_cache
+
+    def test_corrupt_json_is_a_miss(self, cache_dir):
+        kl, _ = _build()
+        cache = DriverCache()
+        entry = cache.lookup_latest("matmul_b16")
+        assert entry is not None
+        path = cache.path("matmul_b16", entry.key)
+        with open(path, "w") as f:
+            f.write("{not json")
+        assert cache.lookup_latest("matmul_b16") is None
+
+
+class TestWarmStart:
+    def test_registry_reads_through_cache(self, cache_dir):
+        _build(register=False)
+        registry.clear()
+        from repro.core.driver import choose_or_default
+        cfg = choose_or_default("matmul_b16",
+                                {"m": 2048, "n": 2048, "k": 2048},
+                                {"bm": 128, "bn": 512, "bk": 512})
+        # a cached driver was loaded, not the default heuristic
+        assert registry.get("matmul_b16") is not None
+        assert set(cfg) == {"bm", "bn", "bk"}
+
+    def test_warm_start_from_cache_lists_kernels(self, cache_dir):
+        _build(register=False)
+        registry.clear()
+        loaded = warm_start_from_cache()
+        assert loaded == ["matmul_b16"]
+        assert registry.get("matmul_b16") is not None
+
+    def test_cross_process_round_trip(self, cache_dir):
+        """Driver built here is loaded (not rebuilt) by a fresh process."""
+        _, first = _build(register=False)
+        expect = first.driver.choose({"m": 4096, "n": 4096, "k": 4096})
+        code = textwrap.dedent("""
+            import json
+            from repro.core.driver import choose_or_default, registry
+            assert registry.get("matmul_b16") is None   # fresh process
+            cfg = choose_or_default("matmul_b16",
+                                    {"m": 4096, "n": 4096, "k": 4096},
+                                    {"bm": -1, "bn": -1, "bk": -1})
+            loaded = registry.get("matmul_b16") is not None
+            print(json.dumps({"cfg": cfg, "loaded": loaded}))
+        """)
+        env = dict(os.environ)
+        env["KLARAPTOR_CACHE_DIR"] = cache_dir
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, env=env,
+                              timeout=120)
+        assert proc.returncode == 0, proc.stderr
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        assert out["loaded"], "fresh process must load the cached driver"
+        assert out["cfg"] == expect
+        assert out["cfg"] != {"bm": -1, "bn": -1, "bk": -1}
+
+
+class TestFallbacks:
+    def test_choose_or_default_wrong_data_params(self, cache_dir):
+        """A driver built for different data params must not crash the
+        untuned fallback path (KeyError/TypeError -> default config)."""
+        _build(register=True)
+        from repro.core.driver import choose_or_default
+        default = {"bq": 512, "bkv": 512}
+        got = choose_or_default("matmul_b16", {"bh": 8, "sq": 128, "skv": 128},
+                                default)
+        assert got == default
+
+    def test_choose_or_default_no_driver_no_cache(self, cache_dir):
+        from repro.core.driver import choose_or_default
+        default = {"bm": 128, "bn": 512, "bk": 512}
+        got = choose_or_default("matmul_b16", {"m": 64, "n": 64, "k": 64},
+                                default)
+        assert got == default

@@ -35,14 +35,15 @@ class TestSharderRules:
         assert long["batch"] is None
 
 
+@pytest.mark.slow
 class TestMeshSharding:
     def test_pspec_on_real_mesh(self, devices8):
         devices8("""
             import jax
             from jax.sharding import PartitionSpec as P
             from repro.distributed.sharding import Sharder, train_rules
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((2, 4), ("data", "model"))
             sh = Sharder(mesh=mesh, rules=train_rules(fsdp=True))
             # divisible dims shard; indivisible fall back to replication
             ps = sh.pspec((8, 512), ("embed", "heads"))
@@ -95,21 +96,23 @@ class TestMeshSharding:
             from jax.sharding import PartitionSpec as P
             from repro.distributed.collectives import (hierarchical_pmean,
                                                        compressed_pmean)
-            mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((2, 4), ("pod", "data"))
             x = jnp.arange(8.0).reshape(8, 1) * jnp.ones((8, 16))
+
+            from repro.distributed.collectives import shard_map_compat
 
             def f(x):
                 return hierarchical_pmean({"g": x}, "data", "pod")["g"]
-            out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(("pod","data")),
-                          out_specs=P()))(x)
+            out = jax.jit(shard_map_compat(f, mesh=mesh,
+                          in_specs=P(("pod","data")), out_specs=P()))(x)
             np.testing.assert_allclose(np.asarray(out), 3.5)
 
             def g(x):
                 m, r = compressed_pmean({"g": x}, "data", "pod")
                 return m["g"]
-            out2 = jax.jit(jax.shard_map(g, mesh=mesh, in_specs=P(("pod","data")),
-                           out_specs=P()))(x)
+            out2 = jax.jit(shard_map_compat(g, mesh=mesh,
+                           in_specs=P(("pod","data")), out_specs=P()))(x)
             # int8 quantization: within one quant step of the true mean
             assert abs(float(out2[0,0]) - 3.5) < 0.1, float(out2[0,0])
             print("ok")
@@ -120,8 +123,8 @@ class TestMeshSharding:
             import jax, jax.numpy as jnp, numpy as np
             from repro.distributed.pipeline_parallel import gpipe_forward
             n_stages, n_micro, mb, dim = 4, 8, 2, 16
-            mesh = jax.make_mesh((4,), ("pipe",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((4,), ("pipe",))
             rng = np.random.RandomState(0)
             ws = jnp.asarray(rng.randn(n_stages, dim, dim) * 0.3,
                              jnp.float32)
@@ -154,16 +157,15 @@ class TestMeshSharding:
             d = tempfile.mkdtemp()
             mgr = CheckpointManager(d, async_save=False)
 
-            mesh1 = jax.make_mesh((2, 4), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import make_mesh
+            mesh1 = make_mesh((2, 4), ("data", "model"))
             sh1 = Sharder(mesh=mesh1, rules=train_rules())
             params = init_params(specs, jax.random.PRNGKey(0))
             params = jax.device_put(params, shardings_for_specs(specs, sh1))
             mgr.save(1, params)
 
             # restore onto a DIFFERENT mesh shape (4x2)
-            mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh2 = make_mesh((4, 2), ("data", "model"))
             sh2 = Sharder(mesh=mesh2, rules=train_rules())
             restored, _, step = elastic_restore(
                 mgr, specs, sh2,

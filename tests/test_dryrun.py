@@ -41,6 +41,7 @@ class TestShapeApplicability:
                     assert "frames" in specs
 
 
+@pytest.mark.slow
 class TestDryRunCell(object):
     def test_lower_compile_and_analyze_small_mesh(self, devices8):
         out = devices8("""
@@ -61,6 +62,8 @@ class TestDryRunCell(object):
                 compiled = lowered.compile()
             mem = compiled.memory_analysis()
             ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):   # older jax returns a list
+                ca = ca[0]
             st = collective_bytes(compiled.as_text())
             assert ca["flops"] > 0
             assert mem.temp_size_in_bytes > 0

@@ -24,6 +24,7 @@ def _loop(tmp_path=None, steps_cfg=None, arch="llama3.2-1b", **kw):
                      ckpt_dir=str(tmp_path) if tmp_path else None, **kw)
 
 
+@pytest.mark.slow
 class TestTraining:
     def test_loss_decreases(self):
         loop = _loop()
@@ -72,6 +73,7 @@ class TestTraining:
         assert hist[-1]["loss"] < hist[0]["loss"] + 0.1
 
 
+@pytest.mark.slow
 class TestServing:
     def test_engine_completes_requests(self):
         cfg = get_config("llama3.2-1b", smoke=True)

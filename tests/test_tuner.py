@@ -116,12 +116,27 @@ class TestDriverProgram:
         p = tmp_path / "driver.py"
         matmul_build.driver.save(str(p))
         src = p.read_text()
-        assert "import math" in src and "def choose" in src
+        assert "import numpy" in src and "def choose" in src
         loaded = DriverProgram.load("matmul_b16", str(p))
         D = {"m": 2048, "n": 2048, "k": 2048}
         assert loaded.choose(D) == matmul_build.driver.choose(D)
 
-    def test_registry_dispatch(self, matmul_build):
+    def test_no_per_config_loop_in_generated_driver(self, matmul_build):
+        """The emitted choose/estimate/candidates evaluate the whole table in
+        ndarray passes -- no for/while loop *statement* over configurations
+        survives (comprehensions over the handful of param names are fine)."""
+        import re
+        src = matmul_build.driver.source
+        for fn in ("def candidates", "def choose", "def estimate"):
+            start = src.index(fn)
+            end = src.find("\ndef ", start + 1)
+            body = src[start:end if end != -1 else len(src)]
+            loops = re.findall(r"^\s*(for|while)\b.*:\s*$", body, re.M)
+            assert not loops, (fn, loops)
+
+    def test_registry_dispatch(self, matmul_build, tmp_path, monkeypatch):
+        # fresh empty cache dir: a registry miss must not fall back to disk
+        monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(tmp_path / "empty"))
         registry.clear()
         assert get_driver("matmul_b16") is None
         register_driver(matmul_build.driver)

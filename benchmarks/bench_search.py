@@ -1,0 +1,125 @@
+"""Search-strategy benchmark: selection quality vs probe budget.
+
+For every search strategy x tier-1 kernel, run a budgeted online search
+(``search_best``) capped at 25% of the device-seconds an exhaustive pass
+over the feasible set would spend, and record the paper's Fig. 1 ``ratio``
+(true best time / true time of the chosen config; >= 0.85 is "good") plus
+the fraction of the exhaustive budget actually spent.  Writes
+``BENCH_search.json`` next to this file.
+
+    PYTHONPATH=src python benchmarks/bench_search.py            # full run
+    PYTHONPATH=src python benchmarks/bench_search.py --smoke    # CI gate
+
+``--smoke`` runs only matmul and exits non-zero unless at least one strategy
+reaches ratio >= 0.85 within the 25% budget -- the loud-failure gate for
+strategy regressions.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.core import (CandidateTable, V5eSimulator, exhaustive_search,
+                        flash_attention_spec, matmul_spec, moe_gmm_spec,
+                        search_best, ssd_scan_spec)
+from repro.search import STRATEGIES, SearchBudget
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_search.json")
+
+BUDGET_FRACTION = 0.25      # of exhaustive probe device-seconds
+GOOD_RATIO = 0.85           # the paper's Fig. 1 "good" threshold
+
+# Tier-1 kernels at representative target sizes (the tests' data points).
+KERNELS = [
+    (matmul_spec(), {"m": 4096, "n": 4096, "k": 4096}),
+    (flash_attention_spec(), {"bh": 64, "sq": 8192, "skv": 8192}),
+    (moe_gmm_spec(), {"e": 8, "g": 4096, "k": 4096, "n": 1536}),
+    (ssd_scan_spec(), {"bh": 48, "s": 65536, "chunkflops": 1}),
+]
+
+
+def _true_time(spec, sim, D, config) -> float:
+    one = CandidateTable.from_rows(spec.program_params, [config])
+    return float(sim.true_time_batch(spec.traffic_table(D, one))[0])
+
+
+def run(kernels=None, seed: int = 29) -> dict:
+    sim = V5eSimulator(noise=0.04, seed=seed)
+    rows = []
+    for spec, D in (kernels if kernels is not None else KERNELS):
+        best_P, best_t, n_configs, exhaustive_s = exhaustive_search(
+            spec, sim, D)
+        budget = SearchBudget(
+            max_device_seconds=BUDGET_FRACTION * exhaustive_s)
+        for name in sorted(STRATEGIES):
+            result = search_best(spec, sim, D, strategy=name, budget=budget,
+                                 seed=seed)
+            chosen_t = (_true_time(spec, sim, D, result.best_config)
+                        if result.best_config is not None else float("inf"))
+            rows.append({
+                "kernel": spec.name,
+                "D": dict(D),
+                "strategy": name,
+                "ratio": best_t / max(chosen_t, 1e-300),
+                "budget_fraction": BUDGET_FRACTION,
+                "device_seconds_fraction":
+                    result.probe_device_seconds / max(exhaustive_s, 1e-300),
+                "n_probe_executions": result.n_probe_executions,
+                "n_probed_rows": result.n_probed_rows,
+                "n_candidates": n_configs,
+                "exhaustive_device_seconds": exhaustive_s,
+                "chosen": result.best_config,
+                "best": best_P,
+                "search_wall_seconds": result.wall_seconds,
+            })
+    good = [r for r in rows
+            if r["ratio"] >= GOOD_RATIO
+            and r["device_seconds_fraction"] <= BUDGET_FRACTION]
+    return {
+        "budget_fraction": BUDGET_FRACTION,
+        "good_ratio_threshold": GOOD_RATIO,
+        "seed": seed,
+        "results": rows,
+        "n_good": len(good),
+        "kernels_with_good_strategy": sorted(
+            {r["kernel"] for r in good}),
+    }
+
+
+def main(argv=None) -> list[str]:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    kernels = KERNELS[:1] if smoke else None
+    report = run(kernels=kernels)
+    if not smoke:
+        with open(OUT_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+    lines = []
+    for r in report["results"]:
+        lines.append(
+            f"search/{r['kernel']}/{r['strategy']},"
+            f"{r['search_wall_seconds'] * 1e6:.0f},"
+            f"ratio={r['ratio']:.3f} "
+            f"dev_frac={r['device_seconds_fraction']:.3f} "
+            f"probes={r['n_probe_executions']}")
+    covered = set(report["kernels_with_good_strategy"])
+    wanted = {spec.name for spec, _ in (kernels or KERNELS)}
+    if not wanted <= covered:
+        missing = sorted(wanted - covered)
+        lines.append(
+            f"search/FAIL,0,no strategy reached ratio>={GOOD_RATIO} within "
+            f"{BUDGET_FRACTION:.0%} of exhaustive device-seconds on: "
+            f"{missing}")
+        if smoke:
+            for ln in lines:
+                print(ln)
+            sys.exit(1)
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV lines:
   fig3  -- system time: KLARAPTOR vs exhaustive search (paper Fig. 3)
   fig4  -- predicted-vs-actual trend alignment (paper Fig. 4)
   choose-- scalar vs vectorized driver choose() latency (BENCH_choose.json)
+  search-- budgeted search-strategy quality vs exhaustive (BENCH_search.json)
   roofline -- three-term roofline per dry-run cell (assignment g), if
               dry-run artifacts exist
 """
@@ -16,12 +17,17 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_choose_latency, fig1_accuracy,
-                            fig3_system_time, fig4_trends, table1_configs)
+    from benchmarks import (bench_choose_latency, bench_search,
+                            fig1_accuracy, fig3_system_time, fig4_trends,
+                            table1_configs)
     for mod in (fig1_accuracy, table1_configs, fig3_system_time,
                 fig4_trends, bench_choose_latency):
         for line in mod.main():
             print(line, flush=True)
+    # explicit empty argv: run.py's own flags must not leak into the
+    # benchmark's --smoke mode (which sys.exits on gate failure)
+    for line in bench_search.main([]):
+        print(line, flush=True)
     try:
         from benchmarks import roofline_table
         for line in roofline_table.main():

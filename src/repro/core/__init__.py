@@ -9,7 +9,7 @@ from .cache import (
 )
 from .device_model import (
     V5E, V5P, DeviceModel, HardwareParams, KernelTraffic, ProbeBatch,
-    ProbeRecord, TrafficOperand, TrafficTable, V5eSimulator,
+    ProbeRecord, RowProbe, TrafficOperand, TrafficTable, V5eSimulator,
 )
 from .driver import (
     DriverProgram, choose_or_default, get_driver, register_driver, registry,
@@ -28,14 +28,16 @@ from .rational_program import (
     BinOp, Ceil, Const, Expr, Fitted, Floor, Max, Min, RationalProgram,
     Select, Var, ceil_div, const, floor_div, var,
 )
-from .tuner import BuildResult, Klaraptor, exhaustive_search, selection_ratio
+from .tuner import (
+    BuildResult, Klaraptor, exhaustive_search, search_best, selection_ratio,
+)
 
 __all__ = [
     "CacheEntry", "DriverCache", "cache_key", "default_cache",
     "default_cache_dir", "spec_fingerprint",
     "V5E", "V5P", "DeviceModel", "HardwareParams", "KernelTraffic",
-    "ProbeBatch", "ProbeRecord", "TrafficOperand", "TrafficTable",
-    "V5eSimulator",
+    "ProbeBatch", "ProbeRecord", "RowProbe", "TrafficOperand",
+    "TrafficTable", "V5eSimulator",
     "DriverProgram", "choose_or_default", "get_driver", "register_driver",
     "registry", "warm_start_from_cache",
     "FitResult", "fit_auto", "fit_polynomial", "fit_rational",
@@ -49,5 +51,6 @@ __all__ = [
     "BinOp", "Ceil", "Const", "Expr", "Fitted", "Floor", "Max", "Min",
     "RationalProgram", "Select", "Var", "ceil_div", "const", "floor_div",
     "var",
-    "BuildResult", "Klaraptor", "exhaustive_search", "selection_ratio",
+    "BuildResult", "Klaraptor", "exhaustive_search", "search_best",
+    "selection_ratio",
 ]

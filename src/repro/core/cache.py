@@ -82,6 +82,8 @@ def spec_fingerprint(spec: KernelSpec) -> dict:
                              for k, v in sorted(spec.param_candidates.items())},
         "pipeline_buffers": spec.pipeline_buffers,
         "fit_vars": {k: list(v) for k, v in sorted(spec.fit_vars.items())},
+        "probe_hints": {k: list(v)
+                        for k, v in sorted(spec.probe_hints.items())},
     }
 
 

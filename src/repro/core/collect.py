@@ -1,15 +1,22 @@
-"""Data collection (paper Section IV, step 1) -- vectorized.
+"""Data collection (paper Section IV, step 1) -- vectorized + budget-aware.
 
 Select a set of probe points K inside the (D, P) space -- small data sizes
 only, so that "the compile-time analysis cannot overwhelm the compilation
 time" -- execute the kernel at each point through the opaque device oracle,
 and record the low-level metric values V.
 
-The whole stage is struct-of-arrays: for each probe data size the feasible
-configurations arrive as a columnar ``CandidateTable``, the device oracle is
-probed once over the whole table (``DeviceModel.probe_batch``), and the
-per-step metric targets are derived in ndarray passes.  No per-config Python
-loop survives.
+Which configurations get probed at each size is decided by a pluggable
+search strategy (repro/search): the feasible set arrives as the *full*
+columnar ``CandidateTable`` and the strategy proposes row indices under a
+hard ``SearchBudget`` (probe executions and device-seconds), replacing the
+old blind head-cut of the candidate table.  The default is seeded stratified
+random with a per-size execution budget of ``max_configs_per_size *
+repeats``; ``successive_halving`` probes everything once at the smallest
+size and carries only the top fraction to larger sizes.
+
+The whole stage stays struct-of-arrays: the device oracle is probed over
+whole index batches (``DeviceModel.probe_rows``) and the per-step metric
+targets are derived in ndarray passes.  No per-config Python loop survives.
 
 Derived per-sample targets (the L_i of the MBP-CBP skeleton):
     mem_step = mem_time / grid_steps
@@ -94,13 +101,14 @@ def default_probe_data(spec: KernelSpec,
                        ) -> list[dict[str, int]]:
     """Small-size probe grid: every data param swept over ``sizes``.
 
-    Params that look like counts (e.g. 'e' experts, 'bh' batch*heads) are
-    probed at small fixed values instead of the size sweep.
+    A spec can override the sweep per data parameter through
+    ``KernelSpec.probe_hints`` -- count-like params (experts, batch*heads)
+    declare small fixed values there instead of needing edits here.
     """
-    small_counts = {"e": (2, 4), "bh": (2, 8), "chunkflops": (1,)}
     axes: list[tuple[int, ...]] = []
     for d in spec.data_params:
-        axes.append(tuple(small_counts.get(d, tuple(sizes))))
+        hint = spec.probe_hints.get(d)
+        axes.append(tuple(hint) if hint is not None else tuple(sizes))
     import itertools
 
     return [dict(zip(spec.data_params, combo))
@@ -116,11 +124,35 @@ def collect(
     max_configs_per_size: int = 32,
     seed: int = 0,
     max_stages: int = 3,
+    strategy=None,
+    budget=None,
 ) -> CollectedData:
+    """Probe the device oracle at strategy-selected (D, P) points.
+
+    ``strategy`` is a repro.search strategy name or instance (default:
+    stratified ``random``); ``budget`` a total ``SearchBudget`` split evenly
+    across the probe sizes (default: ``max_configs_per_size * repeats``
+    executions per size, matching the old head-cut's probe count).
+    """
+    from repro.search import SearchBudget, resolve_strategy, search_table
+
     t0 = time.perf_counter()
     rng = np.random.RandomState(seed)
     probe_data = list(probe_data) if probe_data is not None else \
         default_probe_data(spec)
+    strategy = resolve_strategy(strategy)
+    strategy.begin_run()
+    if budget is not None and not isinstance(budget, SearchBudget):
+        raise TypeError(
+            f"budget must be a repro.search.SearchBudget, got "
+            f"{type(budget).__name__}")
+    if budget is None:
+        ledgers = [SearchBudget(
+            max_executions=max_configs_per_size * repeats).ledger()
+            for _ in probe_data]
+    else:
+        ledgers = [b.ledger() for b in budget.split(len(probe_data))]
+
     all_vars = tuple(spec.data_params) + tuple(spec.program_params)
     col_blocks: dict[str, list[np.ndarray]] = {v: [] for v in all_vars}
     met_blocks: dict[str, list[np.ndarray]] = {m: [] for m in METRIC_COLUMNS}
@@ -128,35 +160,38 @@ def collect(
     stage_blocks: list[np.ndarray] = []
     n_exec = 0
     device_seconds = 0.0
-    for D in probe_data:
-        table = spec.candidates(D, hw, limit=max_configs_per_size)
-        n = len(table)
-        if n == 0:
+    for D, ledger in zip(probe_data, ledgers):
+        table = spec.candidates(D, hw)
+        if not len(table):
             continue
-        tt = spec.traffic_table(D, table, hw)
-        batch = device.probe_batch(tt, rng, repeats=repeats)
-        n_exec += batch.n_executions
-        device_seconds += float(np.sum(batch.total_time_s))
-        t_tot = np.median(batch.total_time_s, axis=0)
-        t_mem = np.median(batch.mem_time_s, axis=0)
-        t_cmp = np.median(batch.compute_time_s, axis=0)
-        steps = np.maximum(batch.grid_steps, 1)
-        buffers = np.minimum(
-            hw.vmem_bytes // np.maximum(batch.vmem_stage_bytes, 1),
-            max_stages)
-        skeleton = np.where(buffers >= 2, np.maximum(t_mem, t_cmp),
-                            t_mem + t_cmp)
-        ovh = np.maximum((t_tot - skeleton) / steps, 1e-9)
-        for d, v in D.items():
-            col_blocks[d].append(np.full(n, int(v), dtype=np.int64))
-        for p in spec.program_params:
-            col_blocks[p].append(table[p])
-        met_blocks["total_time_s"].append(t_tot)
-        met_blocks["mem_step"].append(t_mem / steps)
-        met_blocks["cmp_step"].append(t_cmp / steps)
-        met_blocks["ovh_step"].append(ovh)
-        steps_blocks.append(steps)
-        stage_blocks.append(batch.vmem_stage_bytes)
+
+        def record(indices: np.ndarray, probe) -> None:
+            n = int(indices.size)
+            t_tot = probe.total_time_s
+            t_mem = probe.mem_time_s
+            t_cmp = probe.compute_time_s
+            steps = np.maximum(probe.grid_steps, 1)
+            buffers = np.minimum(
+                hw.vmem_bytes // np.maximum(probe.vmem_stage_bytes, 1),
+                max_stages)
+            skeleton = np.where(buffers >= 2, np.maximum(t_mem, t_cmp),
+                                t_mem + t_cmp)
+            ovh = np.maximum((t_tot - skeleton) / steps, 1e-9)
+            for d, v in D.items():
+                col_blocks[d].append(np.full(n, int(v), dtype=np.int64))
+            for p in spec.program_params:
+                col_blocks[p].append(table[p][indices])
+            met_blocks["total_time_s"].append(t_tot)
+            met_blocks["mem_step"].append(t_mem / steps)
+            met_blocks["cmp_step"].append(t_cmp / steps)
+            met_blocks["ovh_step"].append(ovh)
+            steps_blocks.append(steps)
+            stage_blocks.append(probe.vmem_stage_bytes)
+
+        search_table(spec, device, D, table, strategy, ledger, rng,
+                     hw=hw, default_repeats=repeats, observer=record)
+        n_exec += ledger.spent_executions
+        device_seconds += ledger.spent_device_seconds
 
     def _cat(blocks, dtype=None):
         if not blocks:

@@ -26,7 +26,7 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 __all__ = [
-    "HardwareParams", "V5E", "V5P", "ProbeRecord", "ProbeBatch",
+    "HardwareParams", "V5E", "V5P", "ProbeRecord", "ProbeBatch", "RowProbe",
     "DeviceModel", "KernelTraffic", "TrafficTable", "TrafficOperand",
     "V5eSimulator", "InterpretTimer",
 ]
@@ -118,6 +118,31 @@ class ProbeBatch:
         return int(self.total_time_s.size)
 
 
+@dataclass
+class RowProbe:
+    """Per-row probe summary when every row may use a different repeat count.
+
+    Search strategies (repro/search) refine promising configurations with more
+    repeats than the rest of the table -- successive halving probes everything
+    once, then re-probes survivors.  All timing fields are (n,) medians over
+    each row's own repeats; ``device_seconds`` is the simulated device time
+    actually spent on each row (sum over its executions), which is what a
+    ``SearchBudget`` charges.
+    """
+
+    total_time_s: np.ndarray       # (n,) median over the row's repeats
+    mem_time_s: np.ndarray
+    compute_time_s: np.ndarray
+    grid_steps: np.ndarray
+    vmem_stage_bytes: np.ndarray
+    device_seconds: np.ndarray     # (n,) total probe time spent per row
+    repeats: np.ndarray            # (n,) int64 executions per row
+
+    @property
+    def n_executions(self) -> int:
+        return int(np.sum(self.repeats))
+
+
 class DeviceModel:
     """Opaque device oracle interface (what CUPTI+GPU is in the paper)."""
 
@@ -154,6 +179,42 @@ class DeviceModel:
                 cmp_[r, i] = rec.compute_time_s
         return ProbeBatch(tot, mem, cmp_, np.asarray(table.grid_steps),
                           np.asarray(table.vmem_stage_bytes))
+
+    def probe_rows(self, table: "TrafficTable",
+                   rng: np.random.RandomState,
+                   repeats: np.ndarray | int = 1) -> RowProbe:
+        """Probe row ``i`` of ``table`` ``repeats[i]`` times (medians per row).
+
+        Per-row repeat counts are what budgeted search strategies need:
+        successive halving probes the whole table once and spends further
+        repeats only on survivors.  Rows are grouped by repeat count and each
+        group goes through ``probe_batch``, so backends with vectorized
+        physics stay vectorized (one pass per distinct repeat value, of which
+        a halving schedule has only a handful).
+        """
+        n = len(table)
+        reps = np.maximum(
+            np.broadcast_to(np.asarray(repeats, dtype=np.int64), (n,)), 1)
+        tot = np.empty(n)
+        mem = np.empty(n)
+        cmp_ = np.empty(n)
+        spent = np.empty(n)
+        for r in np.unique(reps):
+            idx = np.flatnonzero(reps == r)
+            batch = self.probe_batch(table.select(idx), rng, repeats=int(r))
+            tot[idx] = np.median(batch.total_time_s, axis=0)
+            mem[idx] = np.median(batch.mem_time_s, axis=0)
+            cmp_[idx] = np.median(batch.compute_time_s, axis=0)
+            spent[idx] = np.sum(batch.total_time_s, axis=0)
+        return RowProbe(
+            total_time_s=tot,
+            mem_time_s=mem,
+            compute_time_s=cmp_,
+            grid_steps=np.asarray(table.grid_steps),
+            vmem_stage_bytes=np.asarray(table.vmem_stage_bytes),
+            device_seconds=spent,
+            repeats=np.array(reps),
+        )
 
     def true_time_batch(self, table: "TrafficTable") -> np.ndarray:
         raise NotImplementedError(
@@ -210,6 +271,26 @@ class TrafficTable:
 
     def __len__(self) -> int:
         return int(self.grid_steps.shape[0])
+
+    def select(self, index) -> "TrafficTable":
+        """New table keeping rows selected by a boolean mask or index array.
+
+        Mirrors ``CandidateTable.select`` so search strategies can probe a
+        subset of the candidate table through the same batched oracle path.
+        """
+        return TrafficTable(
+            grid_steps=self.grid_steps[index],
+            flops_total=self.flops_total[index],
+            operands=[TrafficOperand(
+                name=op.name,
+                shapes=op.shapes[index],
+                fetches=op.fetches[index],
+                dtype_bytes=op.dtype_bytes,
+                is_output=op.is_output,
+            ) for op in self.operands],
+            vmem_stage_bytes=self.vmem_stage_bytes[index],
+            mxu_fraction=self.mxu_fraction,
+        )
 
     def row(self, i: int) -> KernelTraffic:
         """Scalar KernelTraffic view of config ``i`` (generic-probe fallback)."""

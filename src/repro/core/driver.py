@@ -73,12 +73,17 @@ class DriverProgram:
             return cls.from_source(kernel, f.read(), hw)
 
 
+# Distinguishes "never searched" from "searched and failed" in the memo.
+_MISS = object()
+
+
 class _Registry:
     """Process-wide driver registry consulted by kernels/ops.py."""
 
     def __init__(self) -> None:
         self._drivers: dict[str, DriverProgram] = {}
         self._cache_misses: set[tuple[str, str]] = set()
+        self._searched: dict[tuple, dict[str, int]] = {}
         self._lock = threading.Lock()
 
     def register(self, driver: DriverProgram) -> None:
@@ -100,10 +105,24 @@ class _Registry:
     def known_cache_miss(self, kernel: str, hw_name: str) -> bool:
         return (kernel, hw_name) in self._cache_misses
 
+    # Memo for the online-search escalation: searching costs real device
+    # time, so a (kernel, hw, D) triple is searched at most once per process.
+    # ``config=None`` records a *failed* search (infeasible / budget too
+    # small) -- retrying it every launch would re-pay the enumeration cost.
+    def note_searched(self, key: tuple,
+                      config: dict[str, int] | None) -> None:
+        with self._lock:
+            self._searched[key] = config
+
+    def searched(self, key: tuple):
+        """Stored config, None for a memoized failure, _MISS if unseen."""
+        return self._searched.get(key, _MISS)
+
     def clear(self) -> None:
         with self._lock:
             self._drivers.clear()
             self._cache_misses.clear()
+            self._searched.clear()
 
     def kernels(self) -> list[str]:
         return sorted(self._drivers)
@@ -168,9 +187,14 @@ def warm_start_from_cache(kernels: list[str] | None = None,
 
 def choose_or_default(kernel: str, D: Dims,
                       default: dict[str, int],
-                      hw: HardwareParams = V5E) -> dict[str, int]:
+                      hw: HardwareParams = V5E,
+                      *,
+                      spec=None,
+                      device=None,
+                      strategy=None,
+                      budget=None) -> dict[str, int]:
     """Tuned launch parameters if a driver is registered or cached, else
-    ``default``.
+    ``default`` -- or, opt-in, a budgeted online search.
 
     This keeps model code runnable before any tuning has happened (the
     untuned path uses the static heuristic config, like un-instrumented CUDA
@@ -179,11 +203,59 @@ def choose_or_default(kernel: str, D: Dims,
     raises ValueError -- both fall back to the default config rather than
     crash the untuned path.  ``hw`` scopes the cache read-through: only
     artifacts tuned for that device warm-start.
+
+    Escalation path: passing ``spec`` *and* ``device`` opts in to running
+    ``search_best`` when no driver exists -- or when the registered driver
+    is stale/mismatched and raises -- so a budget-aware strategy (see
+    repro.search) probes the actual data size instead of silently using the
+    static default.  Results are memoized per (kernel, hw, D) in the
+    registry, so each shape pays the search at most once per process; a
+    failed search still falls back to ``default``.
     """
     drv = get_driver(kernel, hw=hw)
-    if drv is None:
+    if drv is not None:
+        try:
+            return drv.choose(D)
+        except (ValueError, KeyError, TypeError):
+            pass   # stale/mismatched driver: search if opted in, else default
+    if spec is None and device is None:
         return dict(default)
+    if spec is None or device is None:
+        # Half an opt-in is a caller bug: silently running untuned would
+        # hide it (same principle as the strategy-name resolution below).
+        raise ValueError(
+            "choose_or_default search escalation needs BOTH spec and "
+            "device; got only "
+            + ("spec" if device is None else "device"))
+    from repro.search import SearchBudget, resolve_strategy
+
+    from .tuner import search_best
+
+    # Resolve outside the try: a typo'd strategy name is a configuration
+    # error that must surface, not silently fall back to the default.
+    strategy = resolve_strategy(strategy)
+    if budget is not None and not isinstance(budget, SearchBudget):
+        raise TypeError(
+            f"budget must be a repro.search.SearchBudget, got "
+            f"{type(budget).__name__}")
+    # The memo is scoped by strategy and budget: a failure under a tiny
+    # budget (or a result from a weak strategy) must not be served to a
+    # caller asking for a different search.
+    memo_key = (kernel, hw.name, tuple(sorted(D.items())),
+                tuple(sorted(strategy.fingerprint().items())),
+                tuple(sorted(budget.fingerprint().items()))
+                if budget is not None else None)
+    hit = registry.searched(memo_key)
+    if hit is not _MISS:
+        return dict(hit) if hit is not None else dict(default)
     try:
-        return drv.choose(D)
-    except (ValueError, KeyError, TypeError):
+        result = search_best(spec, device, D, strategy=strategy,
+                             budget=budget, hw=hw)
+    except ValueError:            # infeasible D: no candidates to search
+        registry.note_searched(memo_key, None)
         return dict(default)
+    if result.best_config is None:   # budget too small to fit one probe
+        registry.note_searched(memo_key, None)
+        return dict(default)
+    registry.note_searched(memo_key, result.best_config)
+    return dict(result.best_config)

@@ -173,6 +173,10 @@ class KernelSpec:
     # which variables each fitted low-level metric depends on (keeps the
     # Vandermonde system small -- paper: "degree bounds ... relatively small")
     fit_vars: dict[str, tuple[str, ...]] = field(default_factory=dict)
+    # per-data-param probe values overriding the default small-size sweep of
+    # collect.default_probe_data -- count-like params (experts, batch*heads)
+    # declare small fixed values here so new kernels need no edits to core
+    probe_hints: dict[str, tuple[int, ...]] = field(default_factory=dict)
 
     # -- derived, analytic ----------------------------------------------------
     def grid_extents(self, D: Dims, P: Dims) -> tuple[int, ...]:
@@ -387,22 +391,18 @@ class KernelSpec:
         # Powers of two, 8 .. 2048: sublane granularity up to a large tile.
         return tuple(2 ** i for i in range(3, 12))
 
-    def candidates(self, D: Dims, hw: HardwareParams = V5E,
-                   limit: int | None = None) -> CandidateTable:
+    def candidates(self, D: Dims, hw: HardwareParams = V5E) -> CandidateTable:
         """Columnar feasible configuration table at data size D.
 
-        Enumerates the Cartesian candidate grid as ndarray columns, applies
-        every constraint as a vectorized mask, and (optionally) subsamples
-        to ``limit`` rows with an even stride.
+        Enumerates the Cartesian candidate grid as ndarray columns and
+        applies every constraint as a vectorized mask.  Which rows actually
+        get probed is a repro.search strategy decision (the old even-stride
+        ``limit`` head-cut is gone -- it bypassed the strategy/budget
+        cache-key identity).
         """
         axes = [self.default_candidates(p, D) for p in self.program_params]
         table = CandidateTable.product(self.program_params, axes)
-        table = table.select(self.feasible_mask(D, table, hw))
-        if limit is not None and len(table) > limit:
-            stride = len(table) / limit
-            idx = (np.arange(limit) * stride).astype(np.int64)
-            table = table.select(idx)
-        return table
+        return table.select(self.feasible_mask(D, table, hw))
 
     def metric_fit_vars(self, metric: str) -> tuple[str, ...]:
         if metric in self.fit_vars:
@@ -486,6 +486,7 @@ def flash_attention_spec(head_dim: int = 128, causal: bool = True,
             "cmp_step": ("bq", "bkv"),
             "ovh_step": ("bq", "bkv"),
         },
+        probe_hints={"bh": (2, 8)},
     )
 
 
@@ -517,6 +518,7 @@ def moe_gmm_spec(dtype_bytes: int = 2) -> KernelSpec:
             "bn": (128, 256, 512, 1024),
             "bk": (128, 256, 512, 1024),
         },
+        probe_hints={"e": (2, 4)},
     )
 
 
@@ -555,6 +557,7 @@ def ssd_scan_spec(d_head: int = 64, d_state: int = 128,
         param_candidates={"chunk": (128, 256, 512, 1024, 2048)},
         fit_vars={"mem_step": ("chunk",), "cmp_step": ("chunk",),
                   "ovh_step": ("chunk",)},
+        probe_hints={"bh": (2, 8), "chunkflops": (1,)},
     )
 
 

@@ -4,18 +4,25 @@
 (collect -> fit -> codegen) for one kernel spec against a device oracle and
 returns a ready ``DriverProgram``.  Builds write through the persistent
 driver-artifact cache (core/cache.py): a second process asking for the same
-(spec, hardware, fit hyperparameters) gets the stored driver back without
-probing the device at all.
+(spec, hardware, fit hyperparameters -- including the probe-selection
+strategy and budget) gets the stored driver back without probing the device
+at all.
 
 ``exhaustive_search`` is the paper's comparison baseline (Table I "Best
 Config." column): evaluate *every* feasible configuration at the actual data
 size -- in one batched oracle pass over the candidate table -- and take the
 argmin of true execution time.  ``selection_ratio`` scores a driver the way
 Fig. 1 does: best_time / chosen_time (>= 0.85 is "good").
+
+``search_best`` is the cheap online middle ground: a budget-aware
+repro.search strategy probes a capped fraction of the candidate table at the
+*actual* data size -- for untuned kernels where neither a driver nor the
+exhaustive baseline is affordable.
 """
 
 from __future__ import annotations
 
+import logging
 import time
 from dataclasses import dataclass
 from typing import Mapping, Sequence
@@ -28,11 +35,14 @@ from .collect import CollectedData, collect
 from .device_model import DeviceModel, HardwareParams, V5E, V5eSimulator
 from .driver import DriverProgram, register_driver
 from .fitting import FitResult, fit_auto
-from .kernel_spec import KernelSpec
+from .kernel_spec import CandidateTable, KernelSpec
 from .perf_model import LOW_LEVEL_METRICS, build_time_program
 from .rational import RationalFunction
 
-__all__ = ["BuildResult", "Klaraptor", "exhaustive_search", "selection_ratio"]
+__all__ = ["BuildResult", "Klaraptor", "exhaustive_search", "search_best",
+           "selection_ratio"]
+
+logger = logging.getLogger(__name__)
 
 Dims = Mapping[str, int]
 
@@ -116,8 +126,17 @@ class Klaraptor:
         max_num_degree: int = 2,
         max_den_degree: int = 2,
         use_cache: bool = True,
+        strategy=None,
+        budget=None,
     ) -> BuildResult:
+        from repro.search import SearchBudget, resolve_strategy
+
         t0 = time.perf_counter()
+        strategy = resolve_strategy(strategy)
+        if budget is not None and not isinstance(budget, SearchBudget):
+            raise TypeError(
+                f"budget must be a repro.search.SearchBudget, got "
+                f"{type(budget).__name__}")
         hyper = {
             "repeats": repeats,
             "max_configs_per_size": max_configs_per_size,
@@ -129,6 +148,10 @@ class Klaraptor:
             # probing a different oracle (other device class, other
             # simulator noise/seed) must not hit this build's artifact
             "device": self.device.fingerprint(),
+            # probe selection is part of the build identity: a different
+            # strategy or budget collects different data -> different artifact
+            "strategy": strategy.fingerprint(),
+            "budget": budget.fingerprint() if budget is not None else None,
         }
         key = cache_key(spec, self.hw, hyper) if self.cache else None
 
@@ -152,6 +175,7 @@ class Klaraptor:
             spec, self.device,
             probe_data=probe_data, hw=self.hw, repeats=repeats,
             max_configs_per_size=max_configs_per_size, seed=seed,
+            strategy=strategy, budget=budget,
         )
         fits: dict[str, FitResult] = {}
         for metric in LOW_LEVEL_METRICS:
@@ -179,6 +203,10 @@ class Klaraptor:
             probe_device_seconds=data.probe_device_seconds,
         )
 
+    # One-time flag for the best-effort cache-write warning (class-wide: a
+    # read-only serving node should log the diagnosis once, not per build).
+    _cache_write_warned = False
+
     def _cache_put(self, spec: KernelSpec, key: str, source: str,
                    fits: dict[str, FitResult], data: CollectedData) -> None:
         # Persistence is best-effort: an unwritable cache dir (read-only
@@ -197,13 +225,20 @@ class Klaraptor:
                 created_at=time.time(),
                 hw_name=self.hw.name,
             ))
-        except OSError:
-            pass
+        except OSError as e:
+            if not Klaraptor._cache_write_warned:
+                Klaraptor._cache_write_warned = True
+                logger.warning(
+                    "driver-artifact cache write failed (%s) at %s for "
+                    "kernel %s; builds will not persist -- every process "
+                    "re-pays the probe cost (set KLARAPTOR_CACHE_DIR to a "
+                    "writable path)", e, self.cache.path(spec.name, key),
+                    spec.name)
 
 
 def exhaustive_search(
     spec: KernelSpec,
-    device: V5eSimulator,
+    device: DeviceModel,
     D: Dims,
     hw: HardwareParams = V5E,
 ) -> tuple[dict[str, int], float, int, float]:
@@ -223,16 +258,40 @@ def exhaustive_search(
             float(np.sum(times)))
 
 
+def search_best(
+    spec: KernelSpec,
+    device: DeviceModel,
+    D: Dims,
+    strategy=None,
+    budget=None,
+    hw: HardwareParams = V5E,
+    seed: int = 0,
+):
+    """Budget-aware online search at the actual data size D.
+
+    The cheap alternative to ``exhaustive_search`` for untuned kernels: a
+    repro.search strategy (name or instance; default stratified ``random``)
+    probes the candidate table under a hard ``SearchBudget`` (default ~25%
+    of a one-repeat exhaustive pass) and the observed argmin is returned as
+    a ``SearchResult`` (``.best_config`` is the chosen P).
+    """
+    from repro.search import run_search
+
+    return run_search(spec, device, D, strategy=strategy, budget=budget,
+                      hw=hw, seed=seed)
+
+
 def selection_ratio(
     spec: KernelSpec,
-    device: V5eSimulator,
+    device: DeviceModel,
     driver: DriverProgram,
     D: Dims,
     hw: HardwareParams = V5E,
 ) -> dict:
     """Fig. 1 metric: best_time / chosen_time at data size D (1.0 = optimal)."""
     chosen = driver.choose(D)
-    t_chosen = device.true_time(spec.traffic(D, chosen, hw))
+    one = CandidateTable.from_rows(spec.program_params, [chosen])
+    t_chosen = float(device.true_time_batch(spec.traffic_table(D, one, hw))[0])
     best_P, t_best, n, _ = exhaustive_search(spec, device, D, hw)
     return {
         "kernel": spec.name,

@@ -1,0 +1,41 @@
+"""repro.search: pluggable budget-aware search over candidate tables.
+
+One strategy interface (``ask(budget) -> table indices`` / ``tell(times)``)
+behind one driver (``run_search``), with hard caps on probe executions and
+device-seconds (``SearchBudget``).  Consumers:
+
+  * ``core.collect`` selects compile-time probe points through a strategy
+    instead of head-cutting the candidate table;
+  * ``core.tuner.search_best`` is the cheap online alternative to
+    ``exhaustive_search`` for untuned kernels (opt-in escalation from
+    ``choose_or_default``; exposed by the serving engine for shapes with no
+    cached driver).
+
+Shipped strategies: ``random`` (seeded, stratified over program params),
+``lhs`` (latin hypercube over the log2 tile lattice), ``successive_halving``
+(wide at 1 repeat, top fraction refined with more repeats / carried to
+larger sizes), ``surrogate`` (fit the rational model on probes-so-far and
+spend the tail of the budget on its predicted frontier).
+"""
+
+from .budget import BudgetLedger, SearchBudget
+from .driver import (
+    SearchResult, TableSearchStats, default_budget, run_search, search_table,
+)
+from .halving import SuccessiveHalvingStrategy
+from .strategies import LHSStrategy, RandomStrategy
+from .strategy import (
+    Ask, STRATEGIES, SearchContext, Strategy, make_strategy,
+    register_strategy, resolve_strategy,
+)
+from .surrogate import SurrogateStrategy
+
+__all__ = [
+    "BudgetLedger", "SearchBudget",
+    "SearchResult", "TableSearchStats", "default_budget", "run_search",
+    "search_table",
+    "Ask", "STRATEGIES", "SearchContext", "Strategy", "make_strategy",
+    "register_strategy", "resolve_strategy",
+    "RandomStrategy", "LHSStrategy", "SuccessiveHalvingStrategy",
+    "SurrogateStrategy",
+]

@@ -13,7 +13,9 @@ for the current shapes (once, then memoized) -- the serving-side face of the
 paper's "optimal values ... for each kernel launch independently".  At
 startup the engine warm-starts every tuned driver found in the persistent
 artifact cache (core/cache.py), so a fleet of serving processes shares one
-tuning run instead of each re-deriving launch parameters.
+tuning run instead of each re-deriving launch parameters.  For shapes with
+*no* cached driver, ``tune_for_shape`` runs a budget-aware online search
+(repro.search) instead of falling back to static defaults forever.
 """
 
 from __future__ import annotations
@@ -24,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.driver import warm_start_from_cache
+from repro.core.device_model import V5E
+from repro.core.driver import choose_or_default, warm_start_from_cache
 from repro.serving.sampling import greedy, sample
 
 __all__ = ["Request", "ServingEngine"]
@@ -71,6 +74,30 @@ class ServingEngine:
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.pending.append(req)
+
+    def tune_for_shape(self, spec, D, device, strategy="surrogate",
+                       budget=None, hw=None) -> dict[str, int]:
+        """Launch parameters for a shape with no cached driver.
+
+        Delegates to ``choose_or_default``'s opt-in escalation: the
+        warm-started/cached driver when one exists and fits, otherwise a
+        budget-aware online search against ``device`` (memoized per
+        (kernel, hw, shape) in the driver registry, so a serving process
+        never pays more than one bounded probe pass per shape).
+        ``strategy`` and ``budget`` are repro.search knobs (default:
+        surrogate search at ~25% of a one-repeat exhaustive pass); ``hw``
+        defaults to the oracle's own hardware profile so feasibility and
+        cache lookups match the device being probed.
+        """
+        hw = hw if hw is not None else getattr(device, "hw", V5E)
+        miss = {"__untuned__": -1}
+        cfg = choose_or_default(spec.name, D, miss, hw=hw, spec=spec,
+                                device=device, strategy=strategy,
+                                budget=budget)
+        if cfg == miss:
+            raise ValueError(
+                f"no tuned or searchable config for {spec.name} at {D}")
+        return cfg
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         steps = 0

@@ -71,10 +71,12 @@ class TestCacheStore:
     def test_stale_hash_invalidation(self, cache_dir):
         kl, first = _build()
         cache = DriverCache()
+        from repro.search import RandomStrategy
         key = cache_key(matmul_spec(), kl.hw, {
             "repeats": 2, "max_configs_per_size": 16, "seed": 0,
             "max_num_degree": 2, "max_den_degree": 2, "probe_data": None,
-            "device": kl.device.fingerprint()})
+            "device": kl.device.fingerprint(),
+            "strategy": RandomStrategy().fingerprint(), "budget": None})
         path = cache.path("matmul_b16", key)
         assert os.path.exists(path), "build must write through the cache"
         # tamper with the stored artifact: content hash no longer matches

@@ -1,0 +1,294 @@
+"""repro.search tests: determinism, hard budgets, strategy quality, and the
+strategy-aware cache keys / escalation paths of the consumers."""
+
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core import (Klaraptor, V5eSimulator, exhaustive_search,
+                        matmul_spec, moe_gmm_spec, search_best,
+                        ssd_scan_spec)
+from repro.core.collect import default_probe_data
+from repro.core.driver import choose_or_default, registry
+from repro.search import (STRATEGIES, SearchBudget, make_strategy,
+                          run_search)
+
+D_MM = {"m": 4096, "n": 4096, "k": 4096}
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return V5eSimulator(noise=0.04, seed=11)
+
+
+@pytest.fixture(scope="module")
+def exhaustive_mm(sim):
+    return exhaustive_search(matmul_spec(), sim, D_MM)
+
+
+class TestBudget:
+    def test_split_conserves_totals(self):
+        b = SearchBudget(max_executions=10, max_device_seconds=1.0)
+        parts = b.split(3)
+        assert sum(p.max_executions for p in parts) == 10
+        assert sum(p.max_device_seconds for p in parts) == pytest.approx(1.0)
+
+    def test_unbounded_axes_stay_unbounded(self):
+        parts = SearchBudget().split(4)
+        assert all(p.max_executions is None for p in parts)
+        assert all(p.max_device_seconds is None for p in parts)
+
+    @pytest.mark.parametrize("name", sorted(STRATEGIES))
+    def test_execution_budget_never_exceeded(self, sim, name):
+        budget = SearchBudget(max_executions=17)
+        r = run_search(matmul_spec(), sim, D_MM, strategy=name,
+                       budget=budget, seed=3)
+        assert 0 < r.n_probe_executions <= 17
+        assert r.best_config is not None
+
+    @pytest.mark.parametrize("name", sorted(STRATEGIES))
+    def test_device_seconds_budget_never_exceeded(self, sim, name,
+                                                  exhaustive_mm):
+        _, _, _, exhaustive_s = exhaustive_mm
+        cap = 0.1 * exhaustive_s
+        r = run_search(matmul_spec(), sim, D_MM, strategy=name,
+                       budget=SearchBudget(max_device_seconds=cap), seed=3)
+        assert 0.0 < r.probe_device_seconds <= cap
+        assert r.best_config is not None
+
+    def test_both_axes_enforced_together(self, sim, exhaustive_mm):
+        _, _, _, exhaustive_s = exhaustive_mm
+        budget = SearchBudget(max_executions=40,
+                              max_device_seconds=0.05 * exhaustive_s)
+        for name in sorted(STRATEGIES):
+            r = run_search(matmul_spec(), sim, D_MM, strategy=name,
+                           budget=budget, seed=9)
+            assert r.n_probe_executions <= 40, name
+            assert r.probe_device_seconds <= 0.05 * exhaustive_s, name
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("name", sorted(STRATEGIES))
+    def test_fixed_seed_reproduces_run(self, sim, name):
+        budget = SearchBudget(max_executions=48)
+        a = run_search(matmul_spec(), sim, D_MM, strategy=name,
+                       budget=budget, seed=17)
+        b = run_search(matmul_spec(), sim, D_MM, strategy=name,
+                       budget=budget, seed=17)
+        assert a.best_config == b.best_config
+        assert a.n_probe_executions == b.n_probe_executions
+        assert a.probe_device_seconds == pytest.approx(
+            b.probe_device_seconds)
+
+    def test_different_seed_may_differ_but_stays_valid(self, sim):
+        budget = SearchBudget(max_executions=24)
+        r = run_search(matmul_spec(), sim, D_MM, strategy="random",
+                       budget=budget, seed=101)
+        assert set(r.best_config) == {"bm", "bn", "bk"}
+
+
+class TestStrategyQuality:
+    def test_halving_beats_random_at_equal_budget(self, sim, exhaustive_mm):
+        """Successive halving's noise-aware refinement must reach at least
+        random's selection ratio for the same device-second budget."""
+        best_P, best_t, _, exhaustive_s = exhaustive_mm
+        budget = SearchBudget(max_device_seconds=0.25 * exhaustive_s)
+        spec = matmul_spec()
+
+        def ratio(name):
+            r = run_search(spec, sim, D_MM, strategy=name, budget=budget,
+                           seed=29)
+            times = sim.true_time_batch(spec.traffic_table(
+                D_MM, spec.candidates(D_MM).select(
+                    np.array([r.best_index]))))
+            return best_t / float(times[0])
+
+        assert ratio("successive_halving") >= ratio("random")
+
+    def test_some_strategy_is_good_within_quarter_budget(self, sim,
+                                                         exhaustive_mm):
+        """The acceptance bar: ratio >= 0.85 at <= 25% of exhaustive probe
+        device-seconds on matmul."""
+        best_P, best_t, _, exhaustive_s = exhaustive_mm
+        budget = SearchBudget(max_device_seconds=0.25 * exhaustive_s)
+        spec = matmul_spec()
+        ratios = {}
+        for name in sorted(STRATEGIES):
+            r = run_search(spec, sim, D_MM, strategy=name, budget=budget,
+                           seed=29)
+            t = float(sim.true_time_batch(spec.traffic_table(
+                D_MM, spec.candidates(D_MM).select(
+                    np.array([r.best_index]))))[0])
+            ratios[name] = best_t / t
+        assert max(ratios.values()) >= 0.85, ratios
+
+    def test_search_best_facade(self, sim):
+        r = search_best(matmul_spec(), sim, D_MM, strategy="surrogate",
+                        budget=SearchBudget(max_executions=64), seed=5)
+        assert r.kernel == "matmul_b16"
+        assert r.strategy["name"] == "surrogate"
+        assert set(r.best_config) == {"bm", "bn", "bk"}
+        assert r.n_probe_executions <= 64
+
+
+class TestCollectIntegration:
+    def test_cache_key_separates_strategies(self, sim, tmp_path,
+                                            monkeypatch):
+        """Same spec, same hyperparams, different strategy -> different
+        cache artifact (a rebuild, not a hit)."""
+        monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(tmp_path / "c"))
+        kl = Klaraptor(V5eSimulator(noise=0.03, seed=5))
+        first = kl.build_driver(matmul_spec(), repeats=2,
+                                max_configs_per_size=16, register=False,
+                                strategy="random")
+        assert not first.from_cache
+        second = kl.build_driver(matmul_spec(), repeats=2,
+                                 max_configs_per_size=16, register=False,
+                                 strategy="lhs")
+        assert not second.from_cache
+        again = kl.build_driver(matmul_spec(), repeats=2,
+                                max_configs_per_size=16, register=False,
+                                strategy="random")
+        assert again.from_cache
+
+    def test_collect_respects_total_budget(self, sim):
+        from repro.core.collect import collect
+        budget = SearchBudget(max_executions=60)
+        data = collect(matmul_spec(), sim, repeats=2, budget=budget)
+        assert 0 < data.n_probe_executions <= 60
+
+    def test_halving_carries_survivors_across_sizes(self, sim):
+        """With a multi-size collect, successive halving probes fewer rows
+        at the later sizes (only survivors), not the whole table."""
+        from repro.core.collect import collect
+        strat = make_strategy("successive_halving")
+        data = collect(matmul_spec(), sim,
+                       probe_data=[{"m": 256, "n": 256, "k": 256},
+                                   {"m": 1024, "n": 1024, "k": 1024}],
+                       repeats=2, strategy=strat)
+        cols = data.columns
+        small = cols["m"] == 256
+        large = cols["m"] == 1024
+        # distinct configs probed at the large size <= survivors of small
+        small_cfgs = {tuple(r) for r in np.stack(
+            [cols[p][small] for p in ("bm", "bn", "bk")], axis=1)}
+        large_cfgs = {tuple(r) for r in np.stack(
+            [cols[p][large] for p in ("bm", "bn", "bk")], axis=1)}
+        assert 0 < len(large_cfgs) < len(small_cfgs)
+
+    def test_probe_hints_override_default_sweep(self):
+        spec = moe_gmm_spec()
+        assert spec.probe_hints["e"] == (2, 4)
+        pts = default_probe_data(spec)
+        assert {p["e"] for p in pts} == {2, 4}
+        custom = ssd_scan_spec()
+        custom.probe_hints = {"bh": (3,), "chunkflops": (1,)}
+        pts = default_probe_data(custom, sizes=(128,))
+        assert pts == [{"bh": 3, "s": 128, "chunkflops": 1}]
+
+
+class TestEscalation:
+    def test_choose_or_default_escalates_to_search(self, sim, tmp_path,
+                                                   monkeypatch):
+        monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(tmp_path / "empty"))
+        registry.clear()
+        default = {"bm": -1, "bn": -1, "bk": -1}
+        # without spec/device: static default (the old behavior)
+        assert choose_or_default("matmul_b16", D_MM, default) == default
+        # opt-in: spec+device escalate to a budgeted online search
+        cfg = choose_or_default(
+            "matmul_b16", D_MM, default, spec=matmul_spec(), device=sim,
+            budget=SearchBudget(max_executions=32))
+        assert cfg != default and set(cfg) == {"bm", "bn", "bk"}
+        # memoized: the second call must not search again (same object back)
+        again = choose_or_default(
+            "matmul_b16", D_MM, default, spec=matmul_spec(), device=sim)
+        assert again == cfg
+        registry.clear()
+
+    def test_escalates_past_mismatched_driver(self, sim, tmp_path,
+                                              monkeypatch):
+        """A registered driver that raises on these data params must not
+        short-circuit the opt-in search escalation."""
+        from repro.core import flash_attention_spec
+        from repro.core.driver import DriverProgram, register_driver
+        monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(tmp_path / "empty"))
+        registry.clear()
+        kl = Klaraptor(V5eSimulator(noise=0.03, seed=5), cache=False)
+        build = kl.build_driver(matmul_spec(), repeats=2,
+                                max_configs_per_size=16, register=False)
+        spec = flash_attention_spec()
+        register_driver(DriverProgram(
+            kernel=spec.name, source=build.driver.source,
+            namespace=build.driver.namespace))
+        D = {"bh": 8, "sq": 2048, "skv": 2048}
+        default = {"bq": -1, "bkv": -1}
+        assert choose_or_default(spec.name, D, default) == default
+        cfg = choose_or_default(spec.name, D, default, spec=spec,
+                                device=sim,
+                                budget=SearchBudget(max_executions=16))
+        assert cfg != default and set(cfg) == {"bq", "bkv"}
+        registry.clear()
+
+    def test_unknown_strategy_name_raises(self, sim, tmp_path, monkeypatch):
+        """A typo'd strategy name is a configuration error, not a silent
+        fallback to the static default."""
+        monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(tmp_path / "empty"))
+        registry.clear()
+        with pytest.raises(ValueError, match="unknown search strategy"):
+            choose_or_default("matmul_b16", D_MM,
+                              {"bm": -1, "bn": -1, "bk": -1},
+                              spec=matmul_spec(), device=sim,
+                              strategy="surogate")
+        registry.clear()
+
+    def test_tune_for_shape_survives_mismatched_driver(self, sim, tmp_path,
+                                                       monkeypatch):
+        """A warm-started driver built for other data params must not crash
+        the serving path: tune_for_shape falls back to the online search."""
+        from repro.core import flash_attention_spec
+        from repro.core.driver import DriverProgram, register_driver
+        from repro.serving.engine import ServingEngine
+        monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(tmp_path / "c"))
+        registry.clear()
+        kl = Klaraptor(V5eSimulator(noise=0.03, seed=5))
+        build = kl.build_driver(matmul_spec(), repeats=2,
+                                max_configs_per_size=16, register=False)
+        spec = flash_attention_spec()
+        # a matmul driver registered under the flash kernel's name: its
+        # choose() raises on the flash data params
+        register_driver(DriverProgram(
+            kernel=spec.name, source=build.driver.source,
+            namespace=build.driver.namespace))
+        engine = ServingEngine.__new__(ServingEngine)
+        D = {"bh": 8, "sq": 2048, "skv": 2048}
+        cfg = engine.tune_for_shape(spec, D, sim,
+                                    budget=SearchBudget(max_executions=16))
+        assert set(cfg) == {"bq", "bkv"}
+        registry.clear()
+
+    def test_cache_write_failure_warns_once(self, tmp_path, monkeypatch,
+                                            caplog):
+        """Read-only cache dir: the build succeeds and logs one warning
+        naming the cache path (satellite: diagnosable serving nodes)."""
+        import repro.core.tuner as tuner_mod
+        # A cache root nested under a regular *file* makes every write fail
+        # with NotADirectoryError (an OSError) -- works even when the test
+        # runs as root, where chmod-based read-only dirs are ignored.
+        blocker = tmp_path / "blocker"
+        blocker.write_text("")
+        ro = blocker / "cache"
+        monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(ro))
+        monkeypatch.setattr(tuner_mod.Klaraptor, "_cache_write_warned",
+                            False)
+        kl = Klaraptor(V5eSimulator(noise=0.03, seed=5))
+        with caplog.at_level(logging.WARNING, logger="repro.core.tuner"):
+            kl.build_driver(matmul_spec(), repeats=1,
+                            max_configs_per_size=8, register=False)
+            kl.build_driver(matmul_spec(), repeats=1,
+                            max_configs_per_size=9, register=False)
+        warnings = [r for r in caplog.records
+                    if "cache write failed" in r.message]
+        assert len(warnings) == 1
+        assert str(ro) in warnings[0].message

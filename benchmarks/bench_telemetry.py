@@ -1,0 +1,217 @@
+"""Closed-loop telemetry benchmark: drift detection -> refit -> recovery.
+
+For every tier-1 kernel, start a "serving process" with a deliberately
+corrupted fit -- a driver built against the *wrong hardware physics* (a v5p
+simulator masquerading as v5e, i.e. a fit whose coefficients no longer
+describe the device actually being served) -- then let the telemetry loop
+observe live ``choose_or_default`` launches, detect the predicted-vs-
+observed drift, and run its budget-capped refit.  Recorded per kernel:
+
+  * ``corrupted_ratio`` / ``recovered_ratio`` -- the paper's Fig. 1
+    selection ratio (true best time / true chosen time) before and after
+    the loop reacts, measured through the real serving path
+    (``choose_or_default``),
+  * ``fresh_process_ratio`` -- the ratio a *second* process gets by
+    warm-starting the version-bumped cache entry the refit wrote (fleet
+    convergence),
+  * ``refit_device_fraction`` -- refit device-seconds as a fraction of one
+    exhaustive probe pass over the candidate table at the target size.
+
+Writes ``BENCH_telemetry.json`` next to this file.
+
+    PYTHONPATH=src python benchmarks/bench_telemetry.py            # full run
+    PYTHONPATH=src python benchmarks/bench_telemetry.py --smoke    # CI gate
+
+``--smoke`` runs only matmul and exits non-zero unless drift was detected,
+the recovered ratio reaches >= 0.95, and the refit spent <= 25% of the
+exhaustive pass -- the loud-failure gate for the whole feedback subsystem.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+from repro.core import (CandidateTable, Klaraptor, V5E, V5P, V5eSimulator,
+                        exhaustive_search, flash_attention_spec, matmul_spec,
+                        moe_gmm_spec, registry, selection_ratio,
+                        ssd_scan_spec, warm_start_from_cache)
+from repro.core.cache import DriverCache
+from repro.core.driver import choose_or_default
+from repro.search import SearchBudget
+from repro.telemetry import Telemetry, TelemetryConfig
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_telemetry.json")
+
+BUDGET_FRACTION = 0.25      # refit may spend <=25% of one exhaustive pass
+TARGET_RATIO = 0.95         # recovery bar (Fig. 1 ratio, 1.0 = optimal)
+MAX_STEPS = 64              # serving launches before giving up on drift
+
+# Tier-1 kernels at representative target sizes (same as bench_search), with
+# the static heuristic defaults of kernels/ops.py as the untuned fallback.
+KERNELS = [
+    (matmul_spec(), {"m": 4096, "n": 4096, "k": 4096},
+     {"bm": 128, "bn": 512, "bk": 512}),
+    (flash_attention_spec(), {"bh": 64, "sq": 8192, "skv": 8192},
+     {"bq": 512, "bkv": 512}),
+    (moe_gmm_spec(), {"e": 8, "g": 4096, "k": 4096, "n": 1536},
+     {"bg": 128, "bn": 512, "bk": 512}),
+    (ssd_scan_spec(), {"bh": 48, "s": 65536, "chunkflops": 1},
+     {"chunk": 256}),
+]
+
+
+def _true_time(spec, sim, D, config) -> float:
+    one = CandidateTable.from_rows(spec.program_params, [config])
+    return float(sim.true_time_batch(spec.traffic_table(D, one))[0])
+
+
+def _corrupted_build(spec, seed: int):
+    """A fit whose coefficients describe the wrong device: built against
+    v5p physics published under the v5e name, so it warm-starts (and
+    mispredicts) on the v5e serving fleet."""
+    fake_hw = dataclasses.replace(V5P, name=V5E.name)
+    wrong_sim = V5eSimulator(fake_hw, noise=0.04, seed=seed)
+    kl = Klaraptor(wrong_sim, hw=fake_hw)
+    return kl.build_driver(spec, repeats=2, max_configs_per_size=16,
+                           seed=seed, register=True)
+
+
+def run(kernels=None, seed: int = 29) -> dict:
+    sim = V5eSimulator(noise=0.04, seed=seed)
+    rows = []
+    for spec, D, default in (kernels if kernels is not None else KERNELS):
+        t0 = time.perf_counter()
+        # Isolated cache per kernel: the corrupted artifact, the refit's
+        # versioned write-through, and the fresh-process warm start must not
+        # touch the user's real cache.
+        cache_dir = tempfile.mkdtemp(prefix="klaraptor-bench-telemetry-")
+        old_env = os.environ.get("KLARAPTOR_CACHE_DIR")
+        os.environ["KLARAPTOR_CACHE_DIR"] = cache_dir
+        registry.clear()
+        tel = None
+        try:
+            corrupted = _corrupted_build(spec, seed)
+            corrupted_ratio = selection_ratio(spec, sim, corrupted.driver,
+                                              D)["ratio"]
+            best_P, best_t, n_configs, exhaustive_s = exhaustive_search(
+                spec, sim, D)
+
+            tel = Telemetry([spec], sim, seed=seed, config=TelemetryConfig(
+                probe_every=2,
+                refit_budget=SearchBudget(
+                    max_device_seconds=BUDGET_FRACTION * exhaustive_s),
+            )).install()
+            steps = 0
+            for steps in range(1, MAX_STEPS + 1):
+                choose_or_default(spec.name, D, default)
+                if tel.refits:
+                    break
+            final_cfg = choose_or_default(spec.name, D, default)
+            tel.uninstall()
+            recovered_ratio = best_t / max(_true_time(spec, sim, D,
+                                                      final_cfg), 1e-300)
+
+            # Fleet convergence: a second process with a fresh registry
+            # warm-starts whatever generation the cache now holds.
+            cache = DriverCache()
+            version = cache.latest_version(spec.name, V5E.name)
+            registry.clear()
+            fresh = warm_start_from_cache([spec.name])
+            fresh_ratio = (selection_ratio(spec, sim,
+                                           registry.get(spec.name), D)["ratio"]
+                           if fresh else 0.0)
+
+            refit = tel.refits[0] if tel.refits else None
+            rows.append({
+                "kernel": spec.name,
+                "D": dict(D),
+                "n_candidates": n_configs,
+                "exhaustive_device_seconds": exhaustive_s,
+                "corrupted_ratio": corrupted_ratio,
+                "recovered_ratio": recovered_ratio,
+                "fresh_process_ratio": fresh_ratio,
+                "steps_to_refit": steps,
+                "drift_events": len(tel.drift_events),
+                "refits": len(tel.refits),
+                "refit_succeeded": bool(refit and refit.succeeded),
+                "refit_device_seconds":
+                    refit.total_device_seconds if refit else 0.0,
+                "refit_device_fraction":
+                    (refit.total_device_seconds / max(exhaustive_s, 1e-300))
+                    if refit else 0.0,
+                "refit_executions": refit.total_executions if refit else 0,
+                "override": dict(refit.override) if refit and refit.override
+                    else None,
+                "shadow_probe_device_seconds":
+                    tel.counters.probe_device_seconds_total,
+                "cache_version": version,
+                "budget_fraction": BUDGET_FRACTION,
+                "wall_seconds": time.perf_counter() - t0,
+            })
+        finally:
+            # The listener is process-global state: a mid-demo exception
+            # must not leave every later choose_or_default shadow-probed.
+            if tel is not None:
+                tel.uninstall()
+            registry.clear()
+            shutil.rmtree(cache_dir, ignore_errors=True)
+            if old_env is None:
+                os.environ.pop("KLARAPTOR_CACHE_DIR", None)
+            else:
+                os.environ["KLARAPTOR_CACHE_DIR"] = old_env
+    recovered = [r for r in rows
+                 if r["recovered_ratio"] >= TARGET_RATIO
+                 and r["refit_device_fraction"] <= BUDGET_FRACTION
+                 and r["drift_events"] >= 1]
+    return {
+        "budget_fraction": BUDGET_FRACTION,
+        "target_ratio": TARGET_RATIO,
+        "seed": seed,
+        "results": rows,
+        "kernels_recovered": sorted(r["kernel"] for r in recovered),
+    }
+
+
+def main(argv=None) -> list[str]:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    kernels = KERNELS[:1] if smoke else None
+    report = run(kernels=kernels)
+    if not smoke:
+        with open(OUT_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+    lines = []
+    for r in report["results"]:
+        lines.append(
+            f"telemetry/{r['kernel']},"
+            f"{r['wall_seconds'] * 1e6:.0f},"
+            f"corrupted={r['corrupted_ratio']:.3f} "
+            f"recovered={r['recovered_ratio']:.3f} "
+            f"fleet={r['fresh_process_ratio']:.3f} "
+            f"refit_frac={r['refit_device_fraction']:.3f} "
+            f"drifts={r['drift_events']} steps={r['steps_to_refit']}")
+    covered = set(report["kernels_recovered"])
+    wanted = {spec.name for spec, _, _ in (kernels or KERNELS)}
+    if not wanted <= covered:
+        missing = sorted(wanted - covered)
+        lines.append(
+            f"telemetry/FAIL,0,loop did not detect drift and recover to "
+            f"ratio>={TARGET_RATIO} within {BUDGET_FRACTION:.0%} of "
+            f"exhaustive device-seconds on: {missing}")
+        if smoke:
+            for ln in lines:
+                print(ln)
+            sys.exit(1)
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV lines:
   search-- budgeted search-strategy quality vs exhaustive (BENCH_search.json)
   roofline -- three-term roofline per dry-run cell (assignment g), if
               dry-run artifacts exist
+  telemetry -- closed-loop drift-detection/refit recovery
+               (BENCH_telemetry.json); prints telemetry/skipped if the
+               demo cannot run here
 """
 
 from __future__ import annotations
@@ -34,6 +37,15 @@ def main() -> None:
             print(line, flush=True)
     except Exception as e:  # dry-run artifacts may not exist yet
         print(f"roofline/skipped,0,{e!r}", flush=True)
+    # Trailing so a telemetry failure cannot mask the other benches; same
+    # empty-argv pattern as bench_search (run.py's own flags must not leak
+    # into --smoke, which sys.exits on gate failure).
+    try:
+        from benchmarks import bench_telemetry
+        for line in bench_telemetry.main([]):
+            print(line, flush=True)
+    except Exception as e:  # missing telemetry artifacts / no cache dir
+        print(f"telemetry/skipped,0,{e!r}", flush=True)
 
 
 if __name__ == "__main__":

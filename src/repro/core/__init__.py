@@ -12,7 +12,8 @@ from .device_model import (
     ProbeRecord, RowProbe, TrafficOperand, TrafficTable, V5eSimulator,
 )
 from .driver import (
-    DriverProgram, choose_or_default, get_driver, register_driver, registry,
+    ChoiceEvent, DriverProgram, choose_or_default, get_choice_listener,
+    get_driver, register_driver, registry, set_choice_listener,
     warm_start_from_cache,
 )
 from .fitting import FitResult, fit_auto, fit_polynomial, fit_rational
@@ -38,8 +39,9 @@ __all__ = [
     "V5E", "V5P", "DeviceModel", "HardwareParams", "KernelTraffic",
     "ProbeBatch", "ProbeRecord", "RowProbe", "TrafficOperand",
     "TrafficTable", "V5eSimulator",
-    "DriverProgram", "choose_or_default", "get_driver", "register_driver",
-    "registry", "warm_start_from_cache",
+    "ChoiceEvent", "DriverProgram", "choose_or_default",
+    "get_choice_listener", "get_driver", "register_driver", "registry",
+    "set_choice_listener", "warm_start_from_cache",
     "FitResult", "fit_auto", "fit_polynomial", "fit_rational",
     "CandidateTable", "GridAxis", "KernelSpec", "Operand",
     "flash_attention_spec",

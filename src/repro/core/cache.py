@@ -107,9 +107,19 @@ class CacheEntry:
     stats: dict                     # probe counts / device seconds of the build
     created_at: float
     hw_name: str
+    # Tuning generation: bumped by the telemetry refit loop so every process
+    # in a fleet converges on the newest fit.  ``lookup_latest`` prefers the
+    # highest generation; generation 0 is a plain compile-time build.
+    tuning_version: int = 0
 
     def content_hash(self) -> str:
-        return _sha({"source": self.source, "fits": self.fits})
+        payload: dict[str, Any] = {"source": self.source, "fits": self.fits}
+        # Folded into the hash only when set, so generation-0 entries written
+        # by older builds still verify; a tampered generation on a refit
+        # entry invalidates it instead of pinning a stale fit as newest.
+        if self.tuning_version:
+            payload["tuning_version"] = self.tuning_version
+        return _sha(payload)
 
 
 class DriverCache:
@@ -132,35 +142,49 @@ class DriverCache:
 
     def lookup_latest(self, kernel: str,
                       hw_name: str | None = None) -> CacheEntry | None:
-        """Most recently built valid entry for a kernel (read-through path:
-        the caller knows the kernel name but not the build hyperparams).
+        """Newest valid entry for a kernel (read-through path: the caller
+        knows the kernel name but not the build hyperparams).
 
-        ``hw_name`` filters to entries tuned for that device: launch
-        parameters optimal on one device are generally not on another
-        (the paper's performance-portability point), so a mismatched entry
-        must read as a miss, not a warm start.
+        "Newest" orders first by ``tuning_version`` -- a refit written by the
+        telemetry loop outranks every older generation regardless of file
+        times, which is what makes a whole fleet converge on the corrected
+        fit -- then by build timestamp.  ``hw_name`` filters to entries tuned
+        for that device: launch parameters optimal on one device are
+        generally not on another (the paper's performance-portability point),
+        so a mismatched entry must read as a miss, not a warm start.
         """
+        best: CacheEntry | None = None
+        for _, entry in self._entries(kernel, hw_name):
+            if best is None or (entry.tuning_version, entry.created_at) > \
+                    (best.tuning_version, best.created_at):
+                best = entry
+        return best
+
+    def _entries(self, kernel: str, hw_name: str | None = None
+                 ) -> list[tuple[str, CacheEntry]]:
+        """All valid (path, entry) pairs for a kernel, hw-filtered."""
         d = self._kernel_dir(kernel)
         try:
             names = os.listdir(d)
         except OSError:
-            return None
-
-        def _mtime(p: str) -> float:
-            # Concurrent workers evict stale entries; a vanished file just
-            # sorts last instead of raising.
-            try:
-                return os.path.getmtime(p)
-            except OSError:
-                return 0.0
-
-        paths = [os.path.join(d, f) for f in names if f.endswith(".json")]
-        for p in sorted(paths, key=_mtime, reverse=True):
+            return []
+        out = []
+        for f in sorted(names):
+            if not f.endswith(".json"):
+                continue
+            p = os.path.join(d, f)
             entry = self._load(p)
             if entry is not None and (hw_name is None
                                       or entry.hw_name == hw_name):
-                return entry
-        return None
+                out.append((p, entry))
+        return out
+
+    def latest_version(self, kernel: str,
+                       hw_name: str | None = None) -> int:
+        """Highest tuning generation stored for a kernel (0 if none)."""
+        return max((e.tuning_version for _, e in self._entries(kernel,
+                                                               hw_name)),
+                   default=0)
 
     def _load(self, path: str, expect_key: str | None = None
               ) -> CacheEntry | None:
@@ -171,7 +195,8 @@ class DriverCache:
                 kernel=raw["kernel"], key=raw["key"], source=raw["source"],
                 fits=raw["fits"], stats=raw.get("stats", {}),
                 created_at=raw.get("created_at", 0.0),
-                hw_name=raw.get("hw_name", ""))
+                hw_name=raw.get("hw_name", ""),
+                tuning_version=int(raw.get("tuning_version", 0)))
         except (OSError, ValueError, KeyError):
             return None
         # Stale-hash invalidation: stored payload must hash to the recorded
@@ -199,6 +224,7 @@ class DriverCache:
             "stats": entry.stats,
             "created_at": entry.created_at or time.time(),
             "hw_name": entry.hw_name,
+            "tuning_version": entry.tuning_version,
             "content_hash": entry.content_hash(),
         }
         tmp = path + ".tmp"
@@ -208,6 +234,28 @@ class DriverCache:
         return path
 
     # -- maintenance ----------------------------------------------------------
+    def invalidate(self, kernel: str, hw_name: str | None = None,
+                   below_version: int | None = None) -> int:
+        """Delete entries for a kernel; returns how many were removed.
+
+        ``below_version`` keeps entries at that tuning generation or newer --
+        the invalidate-on-refit path: once the telemetry loop has written a
+        corrected generation-N fit, generations < N are evicted so no process
+        can warm-start from the fit that drifted.  ``hw_name`` scopes the
+        eviction to one device's artifacts.
+        """
+        removed = 0
+        for path, entry in self._entries(kernel, hw_name):
+            if below_version is not None and \
+                    entry.tuning_version >= below_version:
+                continue
+            try:
+                os.remove(path)
+                removed += 1
+            except OSError:
+                pass            # a concurrent worker already evicted it
+        return removed
+
     def kernels(self) -> list[str]:
         if not os.path.isdir(self.root):
             return []

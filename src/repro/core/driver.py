@@ -16,19 +16,86 @@ and here.
 
 from __future__ import annotations
 
+import logging
 import threading
 from dataclasses import dataclass, field
-from typing import Mapping
+from typing import Callable, Mapping
 
 import numpy as np
 
 from .codegen import compile_driver_module
 from .device_model import HardwareParams, V5E
 
-__all__ = ["DriverProgram", "registry", "register_driver", "get_driver",
-           "choose_or_default", "warm_start_from_cache"]
+__all__ = ["ChoiceEvent", "DriverProgram", "registry", "register_driver",
+           "get_driver", "choose_or_default", "set_choice_listener",
+           "get_choice_listener", "warm_start_from_cache"]
+
+logger = logging.getLogger(__name__)
 
 Dims = Mapping[str, int]
+
+
+@dataclass(frozen=True)
+class ChoiceEvent:
+    """One launch-parameter decision, as seen by the telemetry listener.
+
+    ``source`` names the path that produced the config: ``"driver"`` (the
+    rational program chose), ``"override"`` (a telemetry-pinned per-shape
+    config), ``"search"``/``"search_memo"`` (the online-search escalation),
+    or ``"default"`` (fell back to the static heuristic).  ``predicted_s``
+    is the driver's rational-program time estimate for the returned config
+    -- the prediction that runtime observability checks against observed
+    launches -- and is only computed when a listener is installed.
+    """
+
+    kernel: str
+    D: dict
+    config: dict
+    source: str
+    predicted_s: float | None
+    hw_name: str
+
+
+# Process-wide choice listener (repro.telemetry installs itself here).  A
+# plain module global, not a registry field: the hook must survive
+# ``registry.clear()`` in tests and cost one ``is None`` check per launch
+# when unused.
+_choice_listener: Callable[[ChoiceEvent], None] | None = None
+_listener_error_warned = False
+
+
+def set_choice_listener(
+        listener: Callable[[ChoiceEvent], None] | None) -> None:
+    """Install (or with None remove) the process-wide choice listener.
+
+    The listener is invoked after every ``choose_or_default`` decision.  It
+    must be cheap; anything it raises is swallowed (with a one-time warning)
+    because observability must never take down the serving path.
+    """
+    global _choice_listener
+    _choice_listener = listener
+
+
+def get_choice_listener() -> Callable[[ChoiceEvent], None] | None:
+    return _choice_listener
+
+
+def _notify(kernel: str, D: Dims, config: dict, source: str,
+            predicted_s: float | None, hw: HardwareParams) -> None:
+    global _listener_error_warned
+    if _choice_listener is None:
+        return
+    try:
+        _choice_listener(ChoiceEvent(
+            kernel=kernel, D=dict(D), config=dict(config), source=source,
+            predicted_s=predicted_s, hw_name=hw.name))
+    except Exception:
+        if not _listener_error_warned:
+            _listener_error_warned = True
+            logger.warning(
+                "choice listener raised; telemetry for this process is "
+                "unreliable (further listener errors are suppressed)",
+                exc_info=True)
 
 
 @dataclass
@@ -84,6 +151,8 @@ class _Registry:
         self._drivers: dict[str, DriverProgram] = {}
         self._cache_misses: set[tuple[str, str]] = set()
         self._searched: dict[tuple, dict[str, int]] = {}
+        self._overrides: dict[tuple, dict[str, int]] = {}
+        self._stats = {"disk_cache_hits": 0, "disk_cache_misses": 0}
         self._lock = threading.Lock()
 
     def register(self, driver: DriverProgram) -> None:
@@ -118,11 +187,60 @@ class _Registry:
         """Stored config, None for a memoized failure, _MISS if unseen."""
         return self._searched.get(key, _MISS)
 
+    # Per-shape pinned configs, set by the telemetry refit loop when a live
+    # probe showed a specific config observably faster than the (possibly
+    # still imperfect) refitted driver's choice at that exact shape.  An
+    # override outranks the driver: it is measured evidence, the driver is a
+    # model.  Overrides are process-local; fleet convergence goes through the
+    # versioned artifact cache.
+    @staticmethod
+    def _override_key(kernel: str, hw_name: str, D: Dims) -> tuple:
+        return (kernel, hw_name, tuple(sorted(D.items())))
+
+    def note_override(self, kernel: str, hw_name: str, D: Dims,
+                      config: dict[str, int]) -> None:
+        with self._lock:
+            self._overrides[self._override_key(kernel, hw_name, D)] = \
+                dict(config)
+
+    def override(self, kernel: str, hw_name: str,
+                 D: Dims) -> dict[str, int] | None:
+        return self._overrides.get(self._override_key(kernel, hw_name, D))
+
+    def note_disk_cache(self, hit: bool) -> None:
+        with self._lock:
+            self._stats["disk_cache_hits" if hit
+                        else "disk_cache_misses"] += 1
+
+    def stats(self) -> dict[str, int]:
+        """Snapshot of the registry's disk read-through counters."""
+        with self._lock:
+            return dict(self._stats)
+
+    def invalidate_kernel(self, kernel: str) -> None:
+        """Forget everything memoized for one kernel (the hot-swap path).
+
+        A refit is about to register a corrected driver: the old driver, the
+        negative disk-read memo, every searched-shape memo and every pinned
+        override for the kernel describe the *previous* fit and must not
+        outlive it.
+        """
+        with self._lock:
+            self._drivers.pop(kernel, None)
+            self._cache_misses = {k for k in self._cache_misses
+                                  if k[0] != kernel}
+            self._searched = {k: v for k, v in self._searched.items()
+                              if k[0] != kernel}
+            self._overrides = {k: v for k, v in self._overrides.items()
+                               if k[0] != kernel}
+
     def clear(self) -> None:
         with self._lock:
             self._drivers.clear()
             self._cache_misses.clear()
             self._searched.clear()
+            self._overrides.clear()
+            self._stats = {"disk_cache_hits": 0, "disk_cache_misses": 0}
 
     def kernels(self) -> list[str]:
         return sorted(self._drivers)
@@ -133,6 +251,36 @@ registry = _Registry()
 
 def register_driver(driver: DriverProgram) -> None:
     registry.register(driver)
+
+
+# One-time flag: a cache entry whose source no longer compiles (written by
+# an older code version, or damaged in a way that still matches its content
+# hash) is diagnosed once, then silently skipped.
+_bad_entry_warned = False
+
+
+def _driver_from_entry(kernel: str, entry, hw: HardwareParams
+                       ) -> DriverProgram | None:
+    """Build a driver from a cache entry, tolerating corrupted sources.
+
+    ``cache._load`` already rejects truncated/tampered payloads via the
+    content hash; what reaches here can still fail to *compile* (e.g. an
+    artifact from an incompatible code version).  One bad artifact must not
+    take down a serving process at startup, so the failure is a one-time
+    ``logging.warning`` and a skip, never a raise.
+    """
+    global _bad_entry_warned
+    try:
+        return DriverProgram.from_source(kernel, entry.source, hw)
+    except Exception as e:
+        if not _bad_entry_warned:
+            _bad_entry_warned = True
+            logger.warning(
+                "cached driver artifact for kernel %s (key %s...) failed to "
+                "load (%s: %s); skipping it -- further bad artifacts are "
+                "skipped silently", kernel, entry.key[:12],
+                type(e).__name__, e)
+        return None
 
 
 def get_driver(kernel: str, read_cache: bool = True,
@@ -153,11 +301,14 @@ def get_driver(kernel: str, read_cache: bool = True,
     from .cache import default_cache
 
     entry = default_cache().lookup_latest(kernel, hw_name=hw.name)
-    if entry is None:
+    drv = (_driver_from_entry(kernel, entry, hw)
+           if entry is not None else None)
+    if drv is None:
         registry.note_cache_miss(kernel, hw.name)
+        registry.note_disk_cache(hit=False)
         return None
-    drv = DriverProgram.from_source(kernel, entry.source, hw)
     registry.register(drv)
+    registry.note_disk_cache(hit=True)
     return drv
 
 
@@ -167,7 +318,8 @@ def warm_start_from_cache(kernels: list[str] | None = None,
 
     ``kernels=None`` loads every kernel present in the cache.  Kernels
     already registered are left untouched; entries tuned for a different
-    device than ``hw`` are skipped.  Returns the loaded names.
+    device than ``hw``, and entries whose stored source fails to load
+    (one-time warning), are skipped.  Returns the loaded names.
     """
     from .cache import default_cache
 
@@ -180,7 +332,10 @@ def warm_start_from_cache(kernels: list[str] | None = None,
         entry = cache.lookup_latest(name, hw_name=hw.name)
         if entry is None:
             continue
-        registry.register(DriverProgram.from_source(name, entry.source, hw))
+        drv = _driver_from_entry(name, entry, hw)
+        if drv is None:
+            continue
+        registry.register(drv)
         loaded.append(name)
     return loaded
 
@@ -208,17 +363,49 @@ def choose_or_default(kernel: str, D: Dims,
     ``search_best`` when no driver exists -- or when the registered driver
     is stale/mismatched and raises -- so a budget-aware strategy (see
     repro.search) probes the actual data size instead of silently using the
-    static default.  Results are memoized per (kernel, hw, D) in the
-    registry, so each shape pays the search at most once per process; a
-    failed search still falls back to ``default``.
+    static default.  Results are memoized per (kernel, hw, D, strategy
+    fingerprint, budget fingerprint) in the registry, so each shape pays the
+    search at most once per process *per search configuration* -- switching
+    strategies or raising the budget at runtime triggers a fresh search
+    instead of being silently ignored; a failed search still falls back to
+    ``default``.
+
+    Every decision is reported to the process-wide choice listener
+    (``set_choice_listener``; installed by ``repro.telemetry``) together
+    with the driver's predicted time for the returned config, which is what
+    the drift detector compares against sampled observed launches.
+    Telemetry-pinned per-shape overrides (measured evidence from a refit
+    pass) outrank the driver's model-based choice.
     """
     drv = get_driver(kernel, hw=hw)
+    override = registry.override(kernel, hw.name, D)
+    if override is not None:
+        pred = None
+        if drv is not None and _choice_listener is not None:
+            try:
+                pred = drv.estimate(D, override)
+            except Exception:
+                pred = None
+        _notify(kernel, D, override, "override", pred, hw)
+        return dict(override)
     if drv is not None:
         try:
-            return drv.choose(D)
+            cfg = drv.choose(D)
         except (ValueError, KeyError, TypeError):
-            pass   # stale/mismatched driver: search if opted in, else default
+            cfg = None  # stale/mismatched driver: search if opted in, else
+        if cfg is not None:
+            pred = None
+            if _choice_listener is not None:
+                # The prediction is telemetry garnish: a driver whose
+                # estimate() breaks must still serve its valid choice.
+                try:
+                    pred = drv.estimate(D, cfg)
+                except Exception:
+                    pred = None
+            _notify(kernel, D, cfg, "driver", pred, hw)
+            return cfg
     if spec is None and device is None:
+        _notify(kernel, D, default, "default", None, hw)
         return dict(default)
     if spec is None or device is None:
         # Half an opt-in is a caller bug: silently running untuned would
@@ -247,15 +434,22 @@ def choose_or_default(kernel: str, D: Dims,
                 if budget is not None else None)
     hit = registry.searched(memo_key)
     if hit is not _MISS:
-        return dict(hit) if hit is not None else dict(default)
+        if hit is None:
+            _notify(kernel, D, default, "default", None, hw)
+            return dict(default)
+        _notify(kernel, D, hit, "search_memo", None, hw)
+        return dict(hit)
     try:
         result = search_best(spec, device, D, strategy=strategy,
                              budget=budget, hw=hw)
     except ValueError:            # infeasible D: no candidates to search
         registry.note_searched(memo_key, None)
+        _notify(kernel, D, default, "default", None, hw)
         return dict(default)
     if result.best_config is None:   # budget too small to fit one probe
         registry.note_searched(memo_key, None)
+        _notify(kernel, D, default, "default", None, hw)
         return dict(default)
     registry.note_searched(memo_key, result.best_config)
+    _notify(kernel, D, result.best_config, "search", None, hw)
     return dict(result.best_config)

@@ -128,6 +128,7 @@ class Klaraptor:
         use_cache: bool = True,
         strategy=None,
         budget=None,
+        cache_version: int = 0,
     ) -> BuildResult:
         from repro.search import SearchBudget, resolve_strategy
 
@@ -194,7 +195,8 @@ class Klaraptor:
         if register:
             register_driver(driver)
         if self.cache is not None and key is not None:
-            self._cache_put(spec, key, source, fits, data)
+            self._cache_put(spec, key, source, fits, data,
+                            tuning_version=cache_version)
         return BuildResult(
             driver=driver,
             fits=fits,
@@ -208,7 +210,8 @@ class Klaraptor:
     _cache_write_warned = False
 
     def _cache_put(self, spec: KernelSpec, key: str, source: str,
-                   fits: dict[str, FitResult], data: CollectedData) -> None:
+                   fits: dict[str, FitResult], data: CollectedData,
+                   tuning_version: int = 0) -> None:
         # Persistence is best-effort: an unwritable cache dir (read-only
         # serving node) must not fail the build itself.
         try:
@@ -224,6 +227,7 @@ class Klaraptor:
                 },
                 created_at=time.time(),
                 hw_name=self.hw.name,
+                tuning_version=tuning_version,
             ))
         except OSError as e:
             if not Klaraptor._cache_write_warned:

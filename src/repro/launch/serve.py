@@ -5,6 +5,11 @@ the KV cache, and KLARAPTOR decode-launch decisions):
 
     python -m repro.launch.serve --arch llama3.2-1b --smoke \
         --requests 8 --max-new 12
+
+``--telemetry`` opts into the runtime observability + drift-adaptive
+retuning loop (repro.telemetry) over the tier-1 kernel specs and prints a
+Prometheus-style metrics dump after the run; ``--telemetry-json PATH``
+writes the full JSON snapshot instead.
 """
 
 from __future__ import annotations
@@ -18,17 +23,28 @@ from repro.distributed.sharding import Sharder, decode_rules
 from repro.models import Model, init_params
 from repro.serving import Request, ServingEngine
 
-__all__ = ["main", "build_engine"]
+__all__ = ["main", "build_engine", "build_telemetry"]
+
+
+def build_telemetry(seed: int = 0):
+    """Default serving telemetry: tier-1 kernel specs over the v5e oracle."""
+    from repro.core import (V5eSimulator, flash_attention_spec, matmul_spec,
+                            moe_gmm_spec, ssd_scan_spec)
+    from repro.telemetry import Telemetry
+
+    specs = [matmul_spec(), flash_attention_spec(), moe_gmm_spec(),
+             ssd_scan_spec()]
+    return Telemetry(specs, V5eSimulator(seed=seed), seed=seed)
 
 
 def build_engine(cfg, batch: int, max_seq: int, mesh=None, params=None,
-                 seed: int = 0) -> ServingEngine:
+                 seed: int = 0, telemetry=None) -> ServingEngine:
     model = Model(cfg)
     sharder = Sharder(mesh=mesh, rules=decode_rules())
     if params is None:
         params = init_params(model.specs(), jax.random.PRNGKey(seed))
     return ServingEngine(model, params, sharder, batch=batch,
-                         max_seq=max_seq)
+                         max_seq=max_seq, telemetry=telemetry)
 
 
 def main() -> None:
@@ -39,10 +55,17 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="install the runtime observability/retuning loop "
+                         "and print its metrics after the run")
+    ap.add_argument("--telemetry-json", metavar="PATH", default=None,
+                    help="with --telemetry: write the JSON snapshot here "
+                         "instead of printing Prometheus text")
     args = ap.parse_args()
 
+    telemetry = build_telemetry() if args.telemetry else None
     cfg = get_config(args.arch, smoke=args.smoke)
-    engine = build_engine(cfg, args.batch, args.max_seq)
+    engine = build_engine(cfg, args.batch, args.max_seq, telemetry=telemetry)
     for i in range(args.requests):
         prompt = [2 + (i * 7 + j) % (cfg.vocab_size - 3)
                   for j in range(4 + i % 4)]
@@ -51,6 +74,14 @@ def main() -> None:
     finished = engine.run()
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"req {r.rid}: prompt={r.prompt} -> output={r.output}")
+    if telemetry is not None:
+        if args.telemetry_json:
+            with open(args.telemetry_json, "w") as f:
+                f.write(telemetry.exporter.json())
+            print(f"telemetry snapshot written to {args.telemetry_json}")
+        else:
+            print(telemetry.prometheus(), end="")
+        telemetry.uninstall()
 
 
 if __name__ == "__main__":

@@ -16,6 +16,12 @@ artifact cache (core/cache.py), so a fleet of serving processes shares one
 tuning run instead of each re-deriving launch parameters.  For shapes with
 *no* cached driver, ``tune_for_shape`` runs a budget-aware online search
 (repro.search) instead of falling back to static defaults forever.
+
+Passing ``telemetry=`` (a ``repro.telemetry.Telemetry``) opts the engine
+into runtime observability: every launch decision is counted, a sampled
+subset is shadow-probed against the device oracle, and drivers whose
+predictions drift from observed reality are refit and hot-swapped under a
+hard probe budget.
 """
 
 from __future__ import annotations
@@ -45,7 +51,8 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model, params, sharder, batch: int, max_seq: int,
-                 eos_id: int = 1, seed: int = 0, warm_start: bool = True):
+                 eos_id: int = 1, seed: int = 0, warm_start: bool = True,
+                 telemetry=None):
         self.model = model
         self.params = params
         self.sharder = sharder
@@ -53,10 +60,21 @@ class ServingEngine:
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
+        # Opt-in runtime observability (repro.telemetry.Telemetry): installed
+        # as the process-wide choice listener before any launch decision so
+        # every choose_or_default this engine triggers is recorded, shadow-
+        # probed (sampled), and drift-checked.  The engine does not own the
+        # loop -- several engines in one process share one listener slot, so
+        # the caller decides which Telemetry wins.
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.install()
         # Load tuned drivers persisted by earlier tuning/serving processes so
         # the first decode step already launches with optimal parameters.
         self.warm_started: list[str] = \
             warm_start_from_cache() if warm_start else []
+        if telemetry is not None:
+            telemetry.note_warm_start(self.warm_started)
 
         self.cache = model.init_cache(batch, max_seq)
         self.slot_req: list[Request | None] = [None] * batch
@@ -82,8 +100,11 @@ class ServingEngine:
         Delegates to ``choose_or_default``'s opt-in escalation: the
         warm-started/cached driver when one exists and fits, otherwise a
         budget-aware online search against ``device`` (memoized per
-        (kernel, hw, shape) in the driver registry, so a serving process
-        never pays more than one bounded probe pass per shape).
+        (kernel, hw, shape, strategy fingerprint, budget fingerprint) in
+        the driver registry, so a serving process never pays more than one
+        bounded probe pass per shape *per search configuration* --
+        switching strategies or raising the budget at runtime re-searches
+        instead of being silently ignored).
         ``strategy`` and ``budget`` are repro.search knobs (default:
         surrogate search at ~25% of a one-repeat exhaustive pass); ``hw``
         defaults to the oracle's own hardware profile so feasibility and

@@ -1,0 +1,148 @@
+"""Metrics export: JSON snapshots and Prometheus-style text.
+
+The exporter is read-only over the telemetry loop's state and fully
+deterministic: keys are emitted in sorted order and nothing time-dependent
+(timestamps, wall clocks) enters the output, so two exports of the same
+state are byte-identical -- the property fleet-side diffing and the tests
+rely on.
+
+Counter semantics (all monotonic within a process):
+  * ``choices_total`` / ``choices_by_source`` -- every instrumented
+    ``choose_or_default`` decision, split by path (driver / override /
+    search / search_memo / default).
+  * ``fallback_default_total`` -- launches served by the static heuristic
+    (the "untuned forever" signal the subsystem exists to drive to zero).
+  * ``shadow_probes_total`` / ``probe_device_seconds_total`` -- sampled
+    observability probes and their bounded device-time cost.
+  * ``drift_events_total``, ``refits_total``, ``refit_failures_total``,
+    ``refit_device_seconds_total``, ``overrides_total`` -- the adaptive
+    loop's activity.
+  * ``disk_cache_hits`` / ``disk_cache_misses`` -- driver-artifact cache
+    read-throughs (from the registry, so they count even before telemetry
+    is installed).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+from repro.core.driver import registry
+
+from .record import bucket_label
+
+__all__ = ["MetricsExporter", "TelemetryCounters"]
+
+
+@dataclass
+class TelemetryCounters:
+    choices_total: int = 0
+    choices_by_source: dict = field(default_factory=dict)
+    fallback_default_total: int = 0
+    shadow_probes_total: int = 0
+    probe_device_seconds_total: float = 0.0
+    drift_events_total: int = 0
+    refits_total: int = 0
+    refit_failures_total: int = 0
+    refit_device_seconds_total: float = 0.0
+    overrides_total: int = 0
+    warm_started_kernels: int = 0
+
+
+class MetricsExporter:
+    """Formats one telemetry loop's state for machines and dashboards."""
+
+    def __init__(self, telemetry):
+        self._t = telemetry
+
+    # -- JSON ----------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Deterministic JSON-able state dump."""
+        t = self._t
+        c = t.counters
+        reg = registry.stats()
+        counters = {
+            "choices_total": c.choices_total,
+            "choices_by_source": dict(sorted(c.choices_by_source.items())),
+            "fallback_default_total": c.fallback_default_total,
+            "shadow_probes_total": c.shadow_probes_total,
+            "probe_device_seconds_total": c.probe_device_seconds_total,
+            "drift_events_total": c.drift_events_total,
+            "refits_total": c.refits_total,
+            "refit_failures_total": c.refit_failures_total,
+            "refit_device_seconds_total": c.refit_device_seconds_total,
+            "overrides_total": c.overrides_total,
+            "warm_started_kernels": c.warm_started_kernels,
+            "disk_cache_hits": reg["disk_cache_hits"],
+            "disk_cache_misses": reg["disk_cache_misses"],
+        }
+        keys = [{
+            "kernel": s.kernel,
+            "hw": s.hw_name,
+            "bucket": bucket_label(s.bucket),
+            "n_choices": s.n_choices,
+            "n_probes": s.n_probes,
+            "rel_error_ewma": s.rel_error_ewma,
+            "last_predicted_s": s.last_predicted_s,
+            "last_observed_s": s.last_observed_s,
+        } for s in t.recorder.keys()]
+        refits = [{
+            "kernel": r.kernel,
+            "D": dict(sorted(r.D.items())),
+            "succeeded": r.succeeded,
+            "cache_version": r.cache_version,
+            "override": (dict(sorted(r.override.items()))
+                         if r.override is not None else None),
+            "search_device_seconds": r.search_device_seconds,
+            "fit_device_seconds": r.fit_device_seconds,
+            "validation_device_seconds": r.validation_device_seconds,
+            "total_device_seconds": r.total_device_seconds,
+            "total_executions": r.total_executions,
+            "error": r.error,
+        } for r in t.refits]
+        return {
+            "config": t.config.fingerprint(),
+            "counters": counters,
+            "keys": keys,
+            "refits": refits,
+        }
+
+    def json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
+
+    # -- Prometheus text -----------------------------------------------------
+    def prometheus(self, prefix: str = "klaraptor") -> str:
+        """Prometheus exposition-format text (counters + per-key gauges)."""
+        snap = self.snapshot()
+        c = snap["counters"]
+        lines: list[str] = []
+
+        def counter(name: str, value, labels: str = "") -> None:
+            lines.append(f"{prefix}_{name}{labels} {value}")
+
+        lines.append(f"# TYPE {prefix}_choices_total counter")
+        for source, n in c["choices_by_source"].items():
+            counter("choices_total", n, f'{{source="{source}"}}')
+        for name in ("fallback_default_total", "shadow_probes_total",
+                     "probe_device_seconds_total", "drift_events_total",
+                     "refits_total", "refit_failures_total",
+                     "refit_device_seconds_total", "overrides_total",
+                     "disk_cache_hits", "disk_cache_misses",
+                     "warm_started_kernels"):
+            lines.append(f"# TYPE {prefix}_{name} counter")
+            counter(name, c[name])
+        lines.append(f"# TYPE {prefix}_rel_error_ewma gauge")
+        lines.append(f"# TYPE {prefix}_key_choices_total counter")
+        lines.append(f"# TYPE {prefix}_key_probes_total counter")
+        for k in snap["keys"]:
+            labels = (f'{{kernel="{k["kernel"]}",hw="{k["hw"]}",'
+                      f'bucket="{k["bucket"]}"}}')
+            if k["rel_error_ewma"] is not None:
+                lines.append(
+                    f"{prefix}_rel_error_ewma{labels} "
+                    f"{k['rel_error_ewma']:.6g}")
+            lines.append(
+                f"{prefix}_key_choices_total{labels} {k['n_choices']}")
+            lines.append(
+                f"{prefix}_key_probes_total{labels} {k['n_probes']}")
+        return "\n".join(lines) + "\n"

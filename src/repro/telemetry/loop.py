@@ -1,0 +1,190 @@
+"""The telemetry loop: observe every launch decision, react to drift.
+
+``Telemetry`` is the subsystem facade a serving process interacts with.  It
+installs itself as the process-wide choice listener
+(``repro.core.driver.set_choice_listener``) so every ``choose_or_default``
+decision -- from ``kernels/ops.py`` dispatch, the serving engine, or direct
+calls -- flows through one ``_on_choice``:
+
+  1. counters are bumped (cheap; the common path does nothing else),
+  2. a sampled subset of driver-predicted choices gets a **shadow probe**
+     through the device oracle (``DeviceModel.probe_rows`` on the single
+     chosen config -- one bounded kernel execution, not a search),
+  3. the probe feeds the per-key drift detector,
+  4. a fired drift event hands the key to the refit controller, which
+     searches + re-fits + hot-swaps under a hard budget.
+
+The loop runs *synchronously inside* the choice callback: TPU launch
+decisions happen at trace time (one per distinct shape), so a rare bounded
+refit there is the TPU analogue of a recompile -- and keeping it on the
+caller's thread makes the whole subsystem deterministic and testable.
+Everything is also callable manually (``shadow_probe``, ``refit_now``) for
+fleets that want the reaction on a side thread.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Iterable, Mapping
+
+import numpy as np
+
+from repro.core.cache import DriverCache
+from repro.core.device_model import DeviceModel, V5E
+from repro.core.driver import ChoiceEvent, set_choice_listener
+from repro.core.kernel_spec import CandidateTable, KernelSpec
+from repro.core.tuner import Klaraptor
+
+from .config import TelemetryConfig
+from .drift import DriftDetector, DriftEvent
+from .export import MetricsExporter, TelemetryCounters
+from .record import KeyStats, LaunchRecorder
+from .refit import RefitController, RefitResult
+
+__all__ = ["Telemetry"]
+
+
+class Telemetry:
+    """Runtime observability + drift-adaptive retuning for a serving process.
+
+    ``specs`` maps kernel names to their ``KernelSpec`` -- only kernels
+    listed here can be shadow-probed and refit (the spec is what turns a
+    (D, P) choice back into a probeable workload).  ``device`` is the
+    oracle probes run against.  ``klaraptor`` (optional) is the builder the
+    refit controller uses; by default one is constructed over the same
+    device/hw with the default artifact cache (pass ``cache=False`` to keep
+    refits process-local).
+    """
+
+    def __init__(self,
+                 specs: Mapping[str, KernelSpec] | Iterable[KernelSpec],
+                 device: DeviceModel,
+                 hw=None,
+                 config: TelemetryConfig | None = None,
+                 klaraptor: Klaraptor | None = None,
+                 cache: DriverCache | None | bool = None,
+                 seed: int = 0):
+        if not isinstance(specs, Mapping):
+            specs = {s.name: s for s in specs}
+        self.specs: dict[str, KernelSpec] = dict(specs)
+        self.device = device
+        self.hw = hw if hw is not None else getattr(device, "hw", V5E)
+        self.config = config or TelemetryConfig()
+        self.klaraptor = klaraptor or Klaraptor(device, hw=self.hw,
+                                                cache=cache)
+        self.recorder = LaunchRecorder(self.config)
+        self.detector = DriftDetector(self.config)
+        self.refitter = RefitController(self.klaraptor, self.config,
+                                        seed=seed)
+        self.exporter = MetricsExporter(self)
+        self.counters = TelemetryCounters()
+        self.drift_events: list[DriftEvent] = []
+        self.refits: list[RefitResult] = []
+        self._rng = np.random.RandomState(seed)
+        self._lock = threading.RLock()
+        self._reacting = False     # reentrancy guard: refits make choices too
+
+    # -- lifecycle -----------------------------------------------------------
+    def install(self) -> "Telemetry":
+        """Become the process-wide choice listener."""
+        set_choice_listener(self._on_choice)
+        return self
+
+    def uninstall(self) -> None:
+        set_choice_listener(None)
+
+    def __enter__(self) -> "Telemetry":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+    def note_warm_start(self, kernels: list[str]) -> None:
+        with self._lock:
+            self.counters.warm_started_kernels += len(kernels)
+
+    # -- export --------------------------------------------------------------
+    def snapshot(self) -> dict:
+        return self.exporter.snapshot()
+
+    def prometheus(self) -> str:
+        return self.exporter.prometheus()
+
+    # -- the loop ------------------------------------------------------------
+    def _on_choice(self, event: ChoiceEvent) -> None:
+        c = self.counters
+        with self._lock:
+            c.choices_total += 1
+            c.choices_by_source[event.source] = \
+                c.choices_by_source.get(event.source, 0) + 1
+            if event.source == "default":
+                c.fallback_default_total += 1
+            if self._reacting:
+                return          # choices made *by* a refit: count only
+            stats, do_probe = self.recorder.observe_choice(event)
+            if not do_probe or event.kernel not in self.specs:
+                return
+            cap = self.config.max_probe_device_seconds
+            if cap is not None and c.probe_device_seconds_total >= cap:
+                return          # shadow-probe budget spent: observe no more
+            self._reacting = True
+        try:
+            self._probe_and_react(event, stats)
+        finally:
+            with self._lock:
+                self._reacting = False
+
+    def _probe_and_react(self, event: ChoiceEvent, stats: KeyStats) -> None:
+        observed = self.shadow_probe(event.kernel, event.D, event.config)
+        if observed is None:
+            return
+        self.recorder.record_probe(stats, event.predicted_s, observed)
+        drift = self.detector.update(stats)
+        if drift is None:
+            return
+        with self._lock:
+            self.counters.drift_events_total += 1
+            self.drift_events.append(drift)
+        if self.config.refit_enabled:
+            self.refit_now(drift)
+
+    def shadow_probe(self, kernel: str, D, config) -> float | None:
+        """One sampled observability probe of the chosen config; observed
+        median time in seconds, or None when the config is unprobeable."""
+        spec = self.specs.get(kernel)
+        if spec is None:
+            return None
+        try:
+            one = CandidateTable.from_rows(spec.program_params, [config])
+            tt = spec.traffic_table(D, one, self.hw)
+            probe = self.device.probe_rows(tt, self._rng,
+                                           repeats=self.config.probe_repeats)
+        except Exception:
+            return None         # mismatched params / infeasible: not fatal
+        with self._lock:
+            self.counters.shadow_probes_total += 1
+            self.counters.probe_device_seconds_total += float(
+                np.sum(probe.device_seconds))
+        return float(probe.total_time_s[0])
+
+    def refit_now(self, drift: DriftEvent) -> RefitResult | None:
+        """Run the budget-capped refit reaction for one drift event."""
+        spec = self.specs.get(drift.kernel)
+        if spec is None:
+            return None
+        result = self.refitter.refit(spec, drift)
+        with self._lock:
+            self.refits.append(result)
+            self.counters.refits_total += 1
+            if not result.succeeded:
+                self.counters.refit_failures_total += 1
+            if result.override is not None:
+                self.counters.overrides_total += 1
+            self.counters.refit_device_seconds_total += \
+                result.total_device_seconds
+        # The swapped-in fit starts with a clean record: the old fit's
+        # errors must not immediately re-condemn the new one.
+        for s in self.recorder.keys():
+            if s.kernel == drift.kernel and s.hw_name == drift.hw_name:
+                self.recorder.reset_key(s)
+        return result

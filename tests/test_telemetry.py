@@ -1,0 +1,418 @@
+"""repro.telemetry tests: recorder primitives, drift thresholds, the full
+drift -> refit -> hot-swap path (budgets never exceeded, cache version bumps
+picked up by a fresh "process"), exporter determinism, and the satellite
+hardening (search-memo scoping by strategy/budget, corrupted-cache-entry
+tolerance at warm start)."""
+
+import dataclasses
+import json
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core import (CandidateTable, Klaraptor, V5E, V5P, V5eSimulator,
+                        matmul_spec, registry, selection_ratio)
+from repro.core.cache import CacheEntry, DriverCache
+from repro.core.driver import (ChoiceEvent, choose_or_default,
+                               get_choice_listener, set_choice_listener,
+                               warm_start_from_cache)
+from repro.search import SearchBudget
+from repro.telemetry import (DriftDetector, LaunchRecorder, RingBuffer,
+                             Telemetry, TelemetryConfig, refit_probe_shapes,
+                             scale_budget, shape_bucket)
+
+D_SMALL = {"m": 1024, "n": 1024, "k": 1024}
+MM_DEFAULT = {"bm": 128, "bn": 512, "bk": 512}
+
+
+@pytest.fixture()
+def clean(tmp_path, monkeypatch):
+    """Isolated cache dir, empty registry, no leftover choice listener."""
+    monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(tmp_path / "cache"))
+    registry.clear()
+    set_choice_listener(None)
+    yield str(tmp_path / "cache")
+    set_choice_listener(None)
+    registry.clear()
+
+
+def _event(D, predicted=1e-3, source="driver", kernel="matmul_b16",
+           config=None):
+    return ChoiceEvent(kernel=kernel, D=dict(D),
+                       config=config or dict(MM_DEFAULT), source=source,
+                       predicted_s=predicted, hw_name=V5E.name)
+
+
+def _corrupted_build(register=True, seed=7):
+    """Driver fit against v5p physics masquerading as v5e: warm-starts on
+    v5e but mispredicts it (the 'stale/mis-fit driver' of the issue)."""
+    fake_hw = dataclasses.replace(V5P, name=V5E.name)
+    kl = Klaraptor(V5eSimulator(fake_hw, noise=0.04, seed=seed), hw=fake_hw)
+    return kl.build_driver(matmul_spec(), repeats=2, max_configs_per_size=16,
+                           seed=seed, register=register)
+
+
+class TestRecorderPrimitives:
+    def test_shape_bucket_is_log2_and_order_insensitive(self):
+        assert shape_bucket({"m": 1024, "n": 1500}) == \
+            shape_bucket({"n": 1500, "m": 1024})
+        b = dict(shape_bucket({"m": 1024, "n": 1500, "e": 1}))
+        assert b == {"m": 10, "n": 11, "e": 0}
+        # 1024 and 1500 differ; 1024 and 4096 differ; 513..1024 share
+        assert dict(shape_bucket({"m": 513}))["m"] == 10
+        assert dict(shape_bucket({"m": 4096}))["m"] == 12
+
+    def test_ring_buffer_wraps_oldest_first(self):
+        rb = RingBuffer(3)
+        for x in (1.0, 2.0):
+            rb.push(x)
+        assert len(rb) == 2 and list(rb.values()) == [1.0, 2.0]
+        for x in (3.0, 4.0):
+            rb.push(x)
+        assert len(rb) == 3 and list(rb.values()) == [2.0, 3.0, 4.0]
+        assert rb.total_pushed == 4
+
+    def test_recorder_samples_first_then_every_nth(self):
+        rec = LaunchRecorder(TelemetryConfig(probe_every=3))
+        probes = [rec.observe_choice(_event(D_SMALL))[1] for _ in range(7)]
+        assert probes == [True, False, False, True, False, False, True]
+        # choices without a prediction are never probe-eligible
+        _, p = rec.observe_choice(_event(D_SMALL, predicted=None,
+                                         source="default"))
+        assert p is False
+
+    def test_scale_budget_slices_never_sum_past_total(self):
+        for total in (100, 7, 2, 1):
+            b = SearchBudget(max_executions=total, max_device_seconds=2.0)
+            parts = [scale_budget(b, f) for f in (0.45, 0.5, 0.05)]
+            assert sum(p.max_executions for p in parts) <= total
+        assert sum(p.max_device_seconds for p in parts) <= 2.0 + 1e-12
+
+    def test_refit_budget_slices_sum_exactly_to_total(self):
+        from repro.telemetry import RefitController
+        kl = Klaraptor(V5eSimulator(noise=0.03, seed=5), cache=False)
+        ctl = RefitController(kl)
+        for total in (200, 7, 2, 1):
+            parts = ctl._budgets(SearchBudget(max_executions=total))
+            assert sum(p.max_executions for p in parts) == total
+
+    def test_refit_probe_shapes_live_ray(self):
+        shapes = refit_probe_shapes({"m": 4096, "k": 4096, "e": 1})
+        assert shapes[0] == {"m": 4096, "k": 4096, "e": 1}
+        assert {"m": 2048, "k": 2048, "e": 1} in shapes
+        assert all(s["e"] == 1 for s in shapes)   # never collapses below 1
+
+
+class TestDriftDetector:
+    def _loop(self, rel_err, n, cfg):
+        rec = LaunchRecorder(cfg)
+        det = DriftDetector(cfg)
+        events = []
+        for _ in range(n):
+            stats, _ = rec.observe_choice(_event(D_SMALL))
+            rec.record_probe(stats, 1e-3, 1e-3 * (1.0 + rel_err))
+            events.append(det.update(stats))
+        return events
+
+    def test_no_fire_below_threshold(self):
+        cfg = TelemetryConfig(drift_threshold=0.25, min_samples=3,
+                              probe_every=1)
+        assert all(e is None for e in self._loop(0.1, 8, cfg))
+
+    def test_fires_only_after_min_samples(self):
+        cfg = TelemetryConfig(drift_threshold=0.25, min_samples=3,
+                              probe_every=1)
+        events = self._loop(0.8, 4, cfg)
+        assert events[0] is None and events[1] is None
+        assert events[2] is not None
+        assert events[2].rel_error_ewma > 0.25
+        assert events[2].D == D_SMALL
+
+    def test_cooldown_and_circuit_breaker(self):
+        cfg = TelemetryConfig(drift_threshold=0.25, min_samples=1,
+                              probe_every=1, cooldown_choices=5,
+                              max_refits_per_key=2)
+        events = self._loop(0.8, 14, cfg)
+        fired = [i for i, e in enumerate(events) if e is not None]
+        assert fired[0] == 0
+        assert fired[1] - fired[0] >= 5            # cooldown respected
+        assert len(fired) == 2                     # circuit breaker
+
+    def test_monitoring_mode_keeps_reporting_drift(self):
+        """refit_enabled=False must record drift events forever (cooldown-
+        rate-limited), not stop after max_refits_per_key firings."""
+        cfg = TelemetryConfig(drift_threshold=0.25, min_samples=1,
+                              probe_every=1, cooldown_choices=2,
+                              max_refits_per_key=2, refit_enabled=False)
+        events = self._loop(0.8, 12, cfg)
+        fired = [i for i, e in enumerate(events) if e is not None]
+        assert len(fired) > 2                      # breaker not engaged
+
+
+class TestSearchMemoScoping:
+    """Satellite: the per-shape search memo is keyed by strategy + budget,
+    so switching strategies or raising the budget at runtime re-searches
+    instead of being silently ignored."""
+
+    class CountingSim(V5eSimulator):
+        def __init__(self, *a, **k):
+            super().__init__(*a, **k)
+            self.probe_rows_calls = 0
+
+        def probe_rows(self, table, rng, repeats=1):
+            self.probe_rows_calls += 1
+            return super().probe_rows(table, rng, repeats)
+
+    def test_strategy_and_budget_scope_the_memo(self, clean):
+        sim = self.CountingSim(noise=0.03, seed=5)
+        spec = matmul_spec()
+        kw = dict(spec=spec, device=sim)
+
+        choose_or_default(spec.name, D_SMALL, MM_DEFAULT, strategy="random",
+                          budget=SearchBudget(max_executions=16), **kw)
+        n1 = sim.probe_rows_calls
+        assert n1 > 0
+        # identical strategy+budget: memoized, no new probes
+        choose_or_default(spec.name, D_SMALL, MM_DEFAULT, strategy="random",
+                          budget=SearchBudget(max_executions=16), **kw)
+        assert sim.probe_rows_calls == n1
+        # different strategy: fresh search
+        choose_or_default(spec.name, D_SMALL, MM_DEFAULT, strategy="lhs",
+                          budget=SearchBudget(max_executions=16), **kw)
+        n2 = sim.probe_rows_calls
+        assert n2 > n1
+        # raised budget: fresh search
+        choose_or_default(spec.name, D_SMALL, MM_DEFAULT, strategy="random",
+                          budget=SearchBudget(max_executions=48), **kw)
+        assert sim.probe_rows_calls > n2
+
+
+class TestWarmStartTolerance:
+    """Satellite: one bad cached artifact must not take down a serving
+    process at startup -- one-time warning, then skip."""
+
+    def _put_bad_entry(self, kernel="matmul_b16"):
+        cache = DriverCache()
+        cache.put(CacheEntry(
+            kernel=kernel, key="0" * 64,
+            source="def broken(:\n",          # valid hash, invalid python
+            fits={}, stats={}, created_at=1.0, hw_name=V5E.name))
+        return cache
+
+    def test_warm_start_skips_and_warns_once(self, clean, caplog,
+                                             monkeypatch):
+        import repro.core.driver as driver_mod
+        monkeypatch.setattr(driver_mod, "_bad_entry_warned", False)
+        self._put_bad_entry()
+        with caplog.at_level(logging.WARNING, logger="repro.core.driver"):
+            assert warm_start_from_cache() == []
+            assert warm_start_from_cache() == []      # second call: silent
+        warns = [r for r in caplog.records
+                 if "failed to load" in r.message]
+        assert len(warns) == 1
+
+    def test_choose_or_default_survives_bad_entry(self, clean, monkeypatch):
+        import repro.core.driver as driver_mod
+        monkeypatch.setattr(driver_mod, "_bad_entry_warned", False)
+        self._put_bad_entry()
+        got = choose_or_default("matmul_b16", D_SMALL, MM_DEFAULT)
+        assert got == MM_DEFAULT
+
+
+class TestCacheVersioning:
+    def test_lookup_prefers_higher_tuning_version(self, clean):
+        cache = DriverCache()
+        old = CacheEntry(kernel="k", key="a" * 64, source="S0", fits={},
+                         stats={}, created_at=100.0, hw_name=V5E.name)
+        new = CacheEntry(kernel="k", key="b" * 64, source="S1", fits={},
+                         stats={}, created_at=1.0,      # older timestamp!
+                         hw_name=V5E.name, tuning_version=1)
+        cache.put(old)
+        cache.put(new)
+        assert cache.latest_version("k", V5E.name) == 1
+        assert cache.lookup_latest("k", V5E.name).source == "S1"
+
+    def test_invalidate_below_version(self, clean):
+        cache = DriverCache()
+        for i, key in enumerate(("a" * 64, "b" * 64, "c" * 64)):
+            cache.put(CacheEntry(kernel="k", key=key, source=f"S{i}",
+                                 fits={}, stats={}, created_at=float(i),
+                                 hw_name=V5E.name, tuning_version=i))
+        assert cache.invalidate("k", V5E.name, below_version=2) == 2
+        assert cache.lookup_latest("k", V5E.name).tuning_version == 2
+        assert cache.latest_version("k", V5E.name) == 2
+
+    def test_tampered_version_is_evicted(self, clean):
+        cache = DriverCache()
+        entry = CacheEntry(kernel="k", key="a" * 64, source="S", fits={},
+                           stats={}, created_at=1.0, hw_name=V5E.name,
+                           tuning_version=1)
+        path = cache.put(entry)
+        raw = json.load(open(path))
+        raw["tuning_version"] = 99          # pin a stale fit as newest
+        json.dump(raw, open(path, "w"))
+        assert cache.lookup_latest("k", V5E.name) is None
+
+
+class TestClosedLoop:
+    """Tentpole: corrupted fit -> drift detected -> budget-capped refit ->
+    hot swap -> versioned write-through picked up by a fresh registry."""
+
+    @pytest.fixture()
+    def loop(self, clean):
+        corrupted = _corrupted_build()
+        sim = V5eSimulator(noise=0.04, seed=11)
+        budget = SearchBudget(max_executions=160, max_device_seconds=1.0)
+        tel = Telemetry([matmul_spec()], sim, seed=3, config=TelemetryConfig(
+            probe_every=2, refit_budget=budget)).install()
+        for _ in range(24):
+            choose_or_default("matmul_b16", D_SMALL, MM_DEFAULT)
+            if tel.refits:
+                break
+        yield tel, sim, corrupted, budget
+        tel.uninstall()
+
+    def test_drift_detected_and_refit_runs(self, loop):
+        tel, sim, corrupted, _ = loop
+        assert len(tel.drift_events) == 1
+        drift = tel.drift_events[0]
+        assert drift.kernel == "matmul_b16"
+        assert drift.rel_error_ewma > tel.config.drift_threshold
+        assert len(tel.refits) == 1 and tel.refits[0].succeeded
+
+    def test_refit_budget_never_exceeded(self, loop):
+        tel, _, _, budget = loop
+        r = tel.refits[0]
+        assert r.total_executions <= budget.max_executions
+        assert r.total_device_seconds <= budget.max_device_seconds
+        # every component is itself bounded by its slice
+        assert r.search_device_seconds <= budget.max_device_seconds
+        assert r.fit_device_seconds <= budget.max_device_seconds
+
+    def test_hot_swap_improves_serving_choice(self, loop):
+        tel, sim, corrupted, _ = loop
+        drv = registry.get("matmul_b16")
+        assert drv is not None
+        assert drv.source != corrupted.driver.source     # actually swapped
+        cfg = choose_or_default("matmul_b16", D_SMALL, MM_DEFAULT)
+        assert cfg != MM_DEFAULT
+        spec = matmul_spec()
+        one = CandidateTable.from_rows(spec.program_params, [cfg])
+        t = float(sim.true_time_batch(spec.traffic_table(D_SMALL, one))[0])
+        from repro.core import exhaustive_search
+        _, best_t, _, _ = exhaustive_search(spec, sim, D_SMALL)
+        assert best_t / t >= 0.90     # small-size recovery bar
+
+    def test_fresh_registry_picks_up_versioned_entry(self, loop):
+        tel, sim, corrupted, _ = loop
+        cache = DriverCache()
+        assert cache.latest_version("matmul_b16", V5E.name) == 1
+        # invalidate-on-refit: the generation-0 (corrupted) artifact is gone
+        entry = cache.lookup_latest("matmul_b16", V5E.name)
+        assert entry.tuning_version == 1
+        assert entry.source != corrupted.driver.source
+        registry.clear()                      # "second process"
+        assert warm_start_from_cache() == ["matmul_b16"]
+        assert registry.get("matmul_b16").source == entry.source
+
+    def test_counters_and_exporter_consistent(self, loop):
+        tel, *_ = loop
+        snap = tel.snapshot()
+        c = snap["counters"]
+        assert c["drift_events_total"] == 1
+        assert c["refits_total"] == 1
+        assert c["shadow_probes_total"] >= tel.config.min_samples
+        assert c["probe_device_seconds_total"] > 0
+        assert c["refit_device_seconds_total"] == pytest.approx(
+            tel.refits[0].total_device_seconds)
+        assert sum(c["choices_by_source"].values()) == c["choices_total"]
+        assert snap["refits"][0]["succeeded"] is True
+
+
+class TestFailedRefit:
+    def test_failed_refit_keeps_old_driver_and_pins_override(self, clean,
+                                                             monkeypatch):
+        """A re-fit that errors must not evict the (drifted but working)
+        driver; the searched config still lands as a per-shape override."""
+        corrupted = _corrupted_build()
+        sim = V5eSimulator(noise=0.04, seed=11)
+        tel = Telemetry([matmul_spec()], sim, seed=3, config=TelemetryConfig(
+            probe_every=1, min_samples=2,
+            refit_budget=SearchBudget(max_executions=64)))
+
+        def broken_build(*a, **k):
+            raise RuntimeError("collect blew up")
+
+        monkeypatch.setattr(tel.klaraptor, "build_driver", broken_build)
+        with tel:
+            for _ in range(8):
+                choose_or_default("matmul_b16", D_SMALL, MM_DEFAULT)
+                if tel.refits:
+                    break
+        r = tel.refits[0]
+        assert not r.succeeded and "fit:" in r.error
+        drv = registry.get("matmul_b16")
+        assert drv is not None
+        assert drv.source == corrupted.driver.source     # old fit kept
+        assert r.override == r.searched_config is not None
+        assert registry.override("matmul_b16", V5E.name, D_SMALL) \
+            == r.override
+        assert choose_or_default("matmul_b16", D_SMALL, MM_DEFAULT) \
+            == r.override
+
+
+class TestExporter:
+    def test_snapshot_deterministic_and_json_stable(self, clean):
+        sim = V5eSimulator(noise=0.04, seed=1)
+        tel = Telemetry([matmul_spec()], sim, cache=False)
+        with tel:
+            for _ in range(3):
+                choose_or_default("nosuchkernel", D_SMALL, MM_DEFAULT)
+        assert tel.snapshot() == tel.snapshot()
+        assert tel.exporter.json() == tel.exporter.json()
+        c = tel.snapshot()["counters"]
+        assert c["choices_total"] == 3
+        assert c["fallback_default_total"] == 3
+
+    def test_prometheus_format(self, clean):
+        sim = V5eSimulator(noise=0.04, seed=1)
+        tel = Telemetry([matmul_spec()], sim, cache=False)
+        with tel:
+            choose_or_default("nosuchkernel", D_SMALL, MM_DEFAULT)
+        text = tel.prometheus()
+        assert text == tel.prometheus()                 # deterministic
+        assert 'klaraptor_choices_total{source="default"} 1' in text
+        assert "# TYPE klaraptor_drift_events_total counter" in text
+        assert text.endswith("\n")
+
+    def test_listener_errors_never_break_serving(self, clean, monkeypatch):
+        import repro.core.driver as driver_mod
+        monkeypatch.setattr(driver_mod, "_listener_error_warned", False)
+
+        def bomb(event):
+            raise RuntimeError("telemetry bug")
+
+        set_choice_listener(bomb)
+        assert choose_or_default("matmul_b16", D_SMALL, MM_DEFAULT) \
+            == MM_DEFAULT
+        assert get_choice_listener() is bomb
+
+
+class TestOverridePath:
+    def test_override_outranks_driver(self, clean):
+        build = _corrupted_build()
+        pinned = {"bm": 256, "bn": 256, "bk": 256}
+        registry.note_override("matmul_b16", V5E.name, D_SMALL, pinned)
+        assert choose_or_default("matmul_b16", D_SMALL, MM_DEFAULT) == pinned
+        other = {"m": 2048, "n": 2048, "k": 2048}
+        assert choose_or_default("matmul_b16", other, MM_DEFAULT) == \
+            build.driver.choose(other)      # only the pinned shape differs
+
+    def test_invalidate_kernel_clears_override(self, clean):
+        _corrupted_build()
+        registry.note_override("matmul_b16", V5E.name, D_SMALL,
+                               {"bm": 256, "bn": 256, "bk": 256})
+        registry.invalidate_kernel("matmul_b16")
+        assert registry.override("matmul_b16", V5E.name, D_SMALL) is None
+        assert registry.get("matmul_b16") is None

@@ -1,0 +1,220 @@
+"""Dispatch benchmark: compiled launch plans vs the vectorized driver.
+
+Two claims of the launch-plan layer (core/plan.py), measured on all four
+tier-1 kernels over a 256-point traffic lattice:
+
+  * **batched compilation** -- ``choose_many`` decides the whole lattice in
+    one broadcast (shapes x configs) pass and must beat S sequential
+    ``choose()`` calls by >= 5x, with bit-identical chosen configs;
+  * **steady-state dispatch** -- once the plan table is registered, one
+    ``choose_or_default`` decision is an O(1) array probe and must beat the
+    vectorized full candidate-table evaluation by >= 10x per decision.
+
+Writes ``BENCH_dispatch.json`` next to this file.
+
+    PYTHONPATH=src python benchmarks/bench_dispatch.py            # full run
+    PYTHONPATH=src python benchmarks/bench_dispatch.py --smoke    # CI gate
+
+``--smoke`` exits non-zero if any kernel misses either speedup bar or any
+chosen config disagrees with per-shape ``choose`` -- the loud-failure gate
+for hot-path regressions.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (Klaraptor, V5eSimulator, choose_or_default,
+                        compile_plan, flash_attention_spec, lattice,
+                        matmul_spec, moe_gmm_spec, registry, ssd_scan_spec)
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_dispatch.json")
+
+MANY_SPEEDUP_BAR = 5.0       # choose_many vs S sequential choose() calls
+DISPATCH_SPEEDUP_BAR = 10.0  # plan-table probe vs vectorized choose()
+
+# Tier-1 kernels with 256-point traffic lattices (a serving envelope:
+# batch x sequence x model-dim grids).
+KERNELS = [
+    (matmul_spec(), {
+        "m": [64, 128, 256, 512, 1024, 2048, 4096, 8192],
+        "n": [256, 512, 1024, 2048, 4096, 6144, 8192, 16384],
+        "k": [512, 1024, 2048, 4096]}),
+    (flash_attention_spec(), {
+        "bh": [2, 4, 6, 8, 12, 16, 24, 32, 40, 48, 56, 64, 80, 96, 112, 128],
+        "sq": [512, 1024, 2048, 4096],
+        "skv": [1024, 2048, 4096, 8192]}),
+    (moe_gmm_spec(), {
+        "e": [2, 4, 8, 16],
+        "g": [256, 512, 1024, 2048],
+        "k": [512, 1024, 2048, 4096],
+        "n": [512, 1024, 1536, 2048]}),
+    (ssd_scan_spec(), {
+        "bh": [2, 4, 6, 8, 12, 16, 24, 32, 40, 48, 56, 64, 80, 96, 112, 128],
+        "s": [512, 1024, 2048, 4096, 8192, 16384, 32768, 65536,
+              768, 1536, 3072, 6144, 12288, 24576, 49152, 98304],
+        "chunkflops": [1]}),
+]
+
+
+def _shapes(driver, cols) -> list[dict]:
+    n = next(iter(cols.values())).shape[0]
+    return [{d: int(cols[d][i]) for d in driver.data_params}
+            for i in range(n)]
+
+
+def _time_best(fn, reps=3):
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def bench_kernel(spec, axes, seed: int = 23) -> dict:
+    sim = V5eSimulator(noise=0.03, seed=seed)
+    kl = Klaraptor(sim, cache=False)
+    build = kl.build_driver(spec, repeats=2, max_configs_per_size=16,
+                            register=True)
+    driver = build.driver
+    cols = lattice(axes)
+    shapes = _shapes(driver, cols)
+    history = driver.namespace["_HISTORY"]
+
+    # S sequential full evaluations (the pre-plan cost of a fresh process
+    # meeting S distinct shapes).  Infeasible shapes are skipped -- the
+    # same shapes come back as ok=False from choose_many.
+    def sequential():
+        history.clear()
+        out = []
+        for D in shapes:
+            try:
+                out.append(driver.choose(D))
+            except ValueError:
+                out.append(None)
+        return out
+
+    seq_cfgs, seq_s = _time_best(sequential)
+
+    def batched():
+        history.clear()
+        return driver.choose_many(cols)
+
+    (many_cfgs, ok), many_s = _time_best(batched)
+
+    agree = True
+    for i, ref in enumerate(seq_cfgs):
+        if ref is None:
+            agree &= not bool(ok[i])
+            continue
+        agree &= bool(ok[i]) and ref == {
+            p: int(many_cfgs[p][i]) for p in driver.program_params}
+
+    # Steady-state per-decision latency: vectorized choose() (history
+    # cleared, so every call pays the full candidate-table evaluation) vs
+    # the registered plan table through the real dispatch entry point.
+    n_eval = min(32, len(shapes))
+
+    def choose_once_each():
+        for D in shapes[:n_eval]:
+            history.clear()
+            driver.choose(D)
+
+    _, eval_s = _time_best(choose_once_each)
+    choose_per_decision = eval_s / n_eval
+
+    plan = compile_plan(driver, cols)
+    registry.register_plan(plan)
+    default = {p: -1 for p in driver.program_params}
+    live = [D for i, D in enumerate(shapes) if ok[i]]
+    reps = max(1, 4096 // max(len(live), 1))
+
+    def dispatch_all():
+        for _ in range(reps):
+            for D in live:
+                choose_or_default(spec.name, D, default)
+
+    _, disp_s = _time_best(dispatch_all)
+    plan_per_decision = disp_s / (reps * max(len(live), 1))
+
+    return {
+        "kernel": spec.name,
+        "n_shapes": len(shapes),
+        "n_feasible": int(np.count_nonzero(ok)),
+        "n_plan_entries": len(plan),
+        "n_candidates": int(build.driver.candidates(live[0])[
+            driver.program_params[0]].shape[0]) if live else 0,
+        "sequential_choose_s": seq_s,
+        "choose_many_s": many_s,
+        "choose_many_speedup": seq_s / max(many_s, 1e-12),
+        "agree": bool(agree),
+        "choose_per_decision_s": choose_per_decision,
+        "plan_per_decision_s": plan_per_decision,
+        "dispatch_speedup": choose_per_decision / max(plan_per_decision,
+                                                      1e-12),
+        "build_wall_s": build.build_wall_seconds,
+    }
+
+
+def run(kernels=None, seed: int = 23) -> dict:
+    registry.clear()
+    rows = [bench_kernel(spec, axes, seed=seed)
+            for spec, axes in (kernels if kernels is not None else KERNELS)]
+    registry.clear()
+    return {
+        "many_speedup_bar": MANY_SPEEDUP_BAR,
+        "dispatch_speedup_bar": DISPATCH_SPEEDUP_BAR,
+        "seed": seed,
+        "results": rows,
+        "all_agree": all(r["agree"] for r in rows),
+        "min_choose_many_speedup": min(r["choose_many_speedup"]
+                                       for r in rows),
+        "min_dispatch_speedup": min(r["dispatch_speedup"] for r in rows),
+    }
+
+
+def main(argv=None) -> list[str]:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    report = run()
+    if not smoke:
+        with open(OUT_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+    lines = []
+    for r in report["results"]:
+        lines.append(
+            f"dispatch/{r['kernel']},"
+            f"{r['plan_per_decision_s'] * 1e6:.1f},"
+            f"plan_vs_choose={r['dispatch_speedup']:.1f}x "
+            f"choose_many={r['choose_many_speedup']:.1f}x "
+            f"agree={r['agree']} shapes={r['n_shapes']}")
+    failures = []
+    if not report["all_agree"]:
+        failures.append("choose_many disagrees with per-shape choose")
+    if report["min_choose_many_speedup"] < MANY_SPEEDUP_BAR:
+        failures.append(
+            f"choose_many speedup {report['min_choose_many_speedup']:.1f}x "
+            f"< {MANY_SPEEDUP_BAR:.0f}x")
+    if report["min_dispatch_speedup"] < DISPATCH_SPEEDUP_BAR:
+        failures.append(
+            f"plan dispatch speedup {report['min_dispatch_speedup']:.1f}x "
+            f"< {DISPATCH_SPEEDUP_BAR:.0f}x")
+    if failures:
+        lines.append(f"dispatch/FAIL,0,{'; '.join(failures)}")
+        if smoke:
+            for ln in lines:
+                print(ln)
+            sys.exit(1)
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV lines:
   telemetry -- closed-loop drift-detection/refit recovery
                (BENCH_telemetry.json); prints telemetry/skipped if the
                demo cannot run here
+  dispatch -- compiled launch-plan steady-state dispatch latency and
+              choose_many batch-compilation speedup (BENCH_dispatch.json);
+              prints dispatch/skipped if the demo cannot run here
 """
 
 from __future__ import annotations
@@ -46,6 +49,14 @@ def main() -> None:
             print(line, flush=True)
     except Exception as e:  # missing telemetry artifacts / no cache dir
         print(f"telemetry/skipped,0,{e!r}", flush=True)
+    # Trailing for the same reason: a plan-dispatch failure must not mask
+    # the benches above (and vice versa).
+    try:
+        from benchmarks import bench_dispatch
+        for line in bench_dispatch.main([]):
+            print(line, flush=True)
+    except Exception as e:
+        print(f"dispatch/skipped,0,{e!r}", flush=True)
 
 
 if __name__ == "__main__":

@@ -4,17 +4,17 @@ Public API re-exports.  See DESIGN.md for the paper-to-TPU mapping.
 """
 
 from .cache import (
-    CacheEntry, DriverCache, cache_key, default_cache, default_cache_dir,
-    spec_fingerprint,
+    CacheEntry, DriverCache, PlanEntry, cache_key, default_cache,
+    default_cache_dir, spec_fingerprint,
 )
 from .device_model import (
     V5E, V5P, DeviceModel, HardwareParams, KernelTraffic, ProbeBatch,
     ProbeRecord, RowProbe, TrafficOperand, TrafficTable, V5eSimulator,
 )
 from .driver import (
-    ChoiceEvent, DriverProgram, choose_or_default, get_choice_listener,
-    get_driver, register_driver, registry, set_choice_listener,
-    warm_start_from_cache,
+    ChoiceEvent, DriverProgram, WarmStartSummary, choose_or_default,
+    get_choice_listener, get_driver, register_driver, registry,
+    set_choice_listener, warm_start_from_cache,
 )
 from .fitting import FitResult, fit_auto, fit_polynomial, fit_rational
 from .kernel_spec import (
@@ -23,23 +23,27 @@ from .kernel_spec import (
 )
 from .occupancy import cuda_occupancy_program, tpu_pipeline_occupancy_program
 from .perf_model import LOW_LEVEL_METRICS, build_time_program
+from .plan import (
+    LaunchPlanTable, compile_plan, lattice, pack_shape, plan_key,
+    precompile_plans,
+)
 from .polynomial import Polynomial, design_matrix, monomial_exponents
 from .rational import RationalFunction
 from .rational_program import (
     BinOp, Ceil, Const, Expr, Fitted, Floor, Max, Min, RationalProgram,
-    Select, Var, ceil_div, const, floor_div, var,
+    Select, Var, ceil_div, const, floor_div, specialize_expr, var,
 )
 from .tuner import (
     BuildResult, Klaraptor, exhaustive_search, search_best, selection_ratio,
 )
 
 __all__ = [
-    "CacheEntry", "DriverCache", "cache_key", "default_cache",
+    "CacheEntry", "DriverCache", "PlanEntry", "cache_key", "default_cache",
     "default_cache_dir", "spec_fingerprint",
     "V5E", "V5P", "DeviceModel", "HardwareParams", "KernelTraffic",
     "ProbeBatch", "ProbeRecord", "RowProbe", "TrafficOperand",
     "TrafficTable", "V5eSimulator",
-    "ChoiceEvent", "DriverProgram", "choose_or_default",
+    "ChoiceEvent", "DriverProgram", "WarmStartSummary", "choose_or_default",
     "get_choice_listener", "get_driver", "register_driver", "registry",
     "set_choice_listener", "warm_start_from_cache",
     "FitResult", "fit_auto", "fit_polynomial", "fit_rational",
@@ -48,11 +52,13 @@ __all__ = [
     "matmul_spec", "moe_gmm_spec", "polybench_suite", "ssd_scan_spec",
     "cuda_occupancy_program", "tpu_pipeline_occupancy_program",
     "LOW_LEVEL_METRICS", "build_time_program",
+    "LaunchPlanTable", "compile_plan", "lattice", "pack_shape", "plan_key",
+    "precompile_plans",
     "Polynomial", "design_matrix", "monomial_exponents",
     "RationalFunction",
     "BinOp", "Ceil", "Const", "Expr", "Fitted", "Floor", "Max", "Min",
     "RationalProgram", "Select", "Var", "ceil_div", "const", "floor_div",
-    "var",
+    "specialize_expr", "var",
     "BuildResult", "Klaraptor", "exhaustive_search", "search_best",
     "selection_ratio",
 ]

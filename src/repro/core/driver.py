@@ -25,10 +25,12 @@ import numpy as np
 
 from .codegen import compile_driver_module
 from .device_model import HardwareParams, V5E
+from .plan import LaunchPlanTable
 
-__all__ = ["ChoiceEvent", "DriverProgram", "registry", "register_driver",
-           "get_driver", "choose_or_default", "set_choice_listener",
-           "get_choice_listener", "warm_start_from_cache"]
+__all__ = ["ChoiceEvent", "DriverProgram", "WarmStartSummary", "registry",
+           "register_driver", "get_driver", "choose_or_default",
+           "set_choice_listener", "get_choice_listener",
+           "warm_start_from_cache"]
 
 logger = logging.getLogger(__name__)
 
@@ -104,12 +106,36 @@ class DriverProgram:
     source: str
     namespace: dict = field(repr=False)
     hw: HardwareParams = V5E
+    # Tuning generation of the fit this driver was built from (0 = plain
+    # compile-time build); compiled launch plans are stamped with it so the
+    # registry can tell a plan derived from this driver from a stale one.
+    tuning_version: int = 0
 
     @classmethod
     def from_source(cls, kernel: str, source: str,
-                    hw: HardwareParams = V5E) -> "DriverProgram":
+                    hw: HardwareParams = V5E,
+                    tuning_version: int = 0) -> "DriverProgram":
         return cls(kernel=kernel, source=source,
-                   namespace=compile_driver_module(source), hw=hw)
+                   namespace=compile_driver_module(source), hw=hw,
+                   tuning_version=tuning_version)
+
+    @property
+    def data_params(self) -> tuple[str, ...]:
+        return tuple(self.namespace["DATA_PARAMS"])
+
+    @property
+    def program_params(self) -> tuple[str, ...]:
+        return tuple(self.namespace["PROGRAM_PARAMS"])
+
+    @property
+    def source_hash(self) -> str:
+        """Identity of the generated module (stamps compiled launch plans)."""
+        h = self.namespace.get("__source_hash__")
+        if h is None:
+            import hashlib
+            h = hashlib.sha256(self.source.encode()).hexdigest()[:16]
+            self.namespace["__source_hash__"] = h
+        return h
 
     # -- step 4: rational program evaluation ---------------------------------
     def estimate(self, D: Dims, P: Dims) -> float:
@@ -129,6 +155,40 @@ class DriverProgram:
     def choose(self, D: Dims, margin: float = 0.02) -> dict[str, int]:
         return self.namespace["choose"](**D, margin=margin)
 
+    def choose_many(self, D_table: Mapping[str, "np.ndarray"],
+                    margin: float = 0.02
+                    ) -> tuple[dict[str, np.ndarray], np.ndarray]:
+        """Batched selection over a whole lattice of shapes at once.
+
+        ``D_table`` maps each data parameter to an aligned column of S
+        values.  Returns ``(configs, ok)``: per-program-param (S,) int64
+        columns and the per-shape feasibility mask.  Modern driver modules
+        run this as one broadcast (shapes x configs) numpy pass; a legacy
+        cached artifact (built before ``choose_many`` existed) degrades to
+        a per-shape ``choose`` loop with identical results.
+        """
+        cols = [np.asarray(D_table[d], dtype=np.int64).reshape(-1)
+                for d in self.data_params]
+        cols = np.broadcast_arrays(*cols)
+        n = int(cols[0].shape[0]) if cols else 0
+        registry.note_choose_many(n)
+        fn = self.namespace.get("choose_many")
+        if fn is not None:
+            return fn(**dict(zip(self.data_params, cols)), margin=margin)
+        params = self.program_params
+        out = {p: np.zeros(n, dtype=np.int64) for p in params}
+        ok = np.zeros(n, dtype=bool)
+        for s in range(n):
+            D = {d: int(c[s]) for d, c in zip(self.data_params, cols)}
+            try:
+                cfg = self.choose(D, margin=margin)
+            except (ValueError, KeyError, TypeError):
+                continue
+            ok[s] = True
+            for p in params:
+                out[p][s] = cfg[p]
+        return out, ok
+
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             f.write(self.source)
@@ -144,6 +204,12 @@ class DriverProgram:
 _MISS = object()
 
 
+def _fresh_stats() -> dict[str, int]:
+    return {"disk_cache_hits": 0, "disk_cache_misses": 0,
+            "plan_hits": 0, "plan_misses": 0,
+            "choose_many_calls": 0, "choose_many_rows": 0}
+
+
 class _Registry:
     """Process-wide driver registry consulted by kernels/ops.py."""
 
@@ -152,7 +218,11 @@ class _Registry:
         self._cache_misses: set[tuple[str, str]] = set()
         self._searched: dict[tuple, dict[str, int]] = {}
         self._overrides: dict[tuple, dict[str, int]] = {}
-        self._stats = {"disk_cache_hits": 0, "disk_cache_misses": 0}
+        # Compiled launch plans: (kernel, hw name) -> immutable probe table,
+        # plus the lazy per-shape fills for envelope misses.
+        self._plans: dict[tuple[str, str], LaunchPlanTable] = {}
+        self._plan_fills: dict[tuple, dict[str, int]] = {}
+        self._stats = _fresh_stats()
         self._lock = threading.Lock()
 
     def register(self, driver: DriverProgram) -> None:
@@ -160,6 +230,12 @@ class _Registry:
             self._drivers[driver.kernel] = driver
             self._cache_misses = {k for k in self._cache_misses
                                   if k[0] != driver.kernel}
+            # A plan is frozen output of the driver it was compiled from;
+            # registering a *different* driver (refit, rebuild) retires the
+            # kernel's plans, while re-registering the same generated module
+            # (cache read-through) keeps them.
+            self._drop_plans_locked(driver.kernel,
+                                    keep_source_hash=driver.source_hash)
 
     def get(self, kernel: str) -> DriverProgram | None:
         return self._drivers.get(kernel)
@@ -212,8 +288,79 @@ class _Registry:
             self._stats["disk_cache_hits" if hit
                         else "disk_cache_misses"] += 1
 
+    # -- compiled launch plans (core/plan.py) ---------------------------------
+    def register_plan(self, plan: LaunchPlanTable) -> None:
+        """Install a compiled plan for (plan.kernel, plan.hw_name).
+
+        The plan becomes the kernel's steady-state dispatch path: an O(1)
+        array probe consulted before the driver's rational-program
+        evaluation.  Registering a new driver or ``invalidate_kernel``
+        drops it.
+        """
+        with self._lock:
+            self._plans[(plan.kernel, plan.hw_name)] = plan
+
+    def plan(self, kernel: str, hw_name: str) -> LaunchPlanTable | None:
+        return self._plans.get((kernel, hw_name))
+
+    def plan_lookup(self, kernel: str, hw_name: str,
+                    D: Dims) -> dict[str, int] | None:
+        """O(1) hot-path dispatch: probe the compiled plan (then the lazy
+        per-shape fills) for a precomputed config.  Hits and misses are
+        counted only when a plan is registered for the kernel -- an untuned
+        kernel costs one dict miss, not a bogus metric."""
+        table = self._plans.get((kernel, hw_name))
+        if table is None:
+            return None
+        cfg = table.lookup(D)
+        if cfg is None:
+            cfg = self._plan_fills.get(
+                (kernel, hw_name, tuple(sorted(D.items()))))
+            if cfg is not None:
+                cfg = dict(cfg)
+        with self._lock:
+            self._stats["plan_hits" if cfg is not None
+                        else "plan_misses"] += 1
+        return cfg
+
+    def note_plan_fill(self, kernel: str, hw_name: str, D: Dims,
+                       config: dict[str, int],
+                       source_hash: str | None = None) -> None:
+        """Lazy single-shape fill: a driver decision for a shape outside
+        the precompiled envelope joins the plan so repeats dispatch O(1).
+        No-op unless a plan table is registered for the kernel, and --
+        checked under the lock -- unless the registered plan was compiled
+        from the same driver that produced ``config`` (``source_hash``):
+        a config computed just before a concurrent refit hot-swap must not
+        be pinned into the new generation's plan."""
+        with self._lock:
+            table = self._plans.get((kernel, hw_name))
+            if table is None:
+                return
+            if source_hash is not None and table.source_hash and \
+                    table.source_hash != source_hash:
+                return
+            self._plan_fills[(kernel, hw_name,
+                              tuple(sorted(D.items())))] = dict(config)
+
+    def note_choose_many(self, n_shapes: int) -> None:
+        with self._lock:
+            self._stats["choose_many_calls"] += 1
+            self._stats["choose_many_rows"] += int(n_shapes)
+
+    def _drop_plans_locked(self, kernel: str,
+                           keep_source_hash: str | None = None) -> None:
+        doomed = [k for k, p in self._plans.items()
+                  if k[0] == kernel and (keep_source_hash is None
+                                         or p.source_hash != keep_source_hash)]
+        for k in doomed:
+            del self._plans[k]
+        if doomed or keep_source_hash is None:
+            self._plan_fills = {k: v for k, v in self._plan_fills.items()
+                                if k[0] != kernel}
+
     def stats(self) -> dict[str, int]:
-        """Snapshot of the registry's disk read-through counters."""
+        """Snapshot of the registry's read-through / dispatch counters."""
         with self._lock:
             return dict(self._stats)
 
@@ -221,9 +368,9 @@ class _Registry:
         """Forget everything memoized for one kernel (the hot-swap path).
 
         A refit is about to register a corrected driver: the old driver, the
-        negative disk-read memo, every searched-shape memo and every pinned
-        override for the kernel describe the *previous* fit and must not
-        outlive it.
+        negative disk-read memo, every searched-shape memo, every pinned
+        override and every compiled launch plan (plus its lazy fills) for
+        the kernel describe the *previous* fit and must not outlive it.
         """
         with self._lock:
             self._drivers.pop(kernel, None)
@@ -233,6 +380,7 @@ class _Registry:
                               if k[0] != kernel}
             self._overrides = {k: v for k, v in self._overrides.items()
                                if k[0] != kernel}
+            self._drop_plans_locked(kernel)
 
     def clear(self) -> None:
         with self._lock:
@@ -240,7 +388,9 @@ class _Registry:
             self._cache_misses.clear()
             self._searched.clear()
             self._overrides.clear()
-            self._stats = {"disk_cache_hits": 0, "disk_cache_misses": 0}
+            self._plans.clear()
+            self._plan_fills.clear()
+            self._stats = _fresh_stats()
 
     def kernels(self) -> list[str]:
         return sorted(self._drivers)
@@ -271,7 +421,8 @@ def _driver_from_entry(kernel: str, entry, hw: HardwareParams
     """
     global _bad_entry_warned
     try:
-        return DriverProgram.from_source(kernel, entry.source, hw)
+        return DriverProgram.from_source(kernel, entry.source, hw,
+                                         tuning_version=entry.tuning_version)
     except Exception as e:
         if not _bad_entry_warned:
             _bad_entry_warned = True
@@ -309,35 +460,113 @@ def get_driver(kernel: str, read_cache: bool = True,
         return None
     registry.register(drv)
     registry.note_disk_cache(hit=True)
+    _install_plan_if_matching(kernel, drv, hw, default_cache())
     return drv
 
 
+def _install_plan_if_matching(kernel: str, drv: DriverProgram | None,
+                              hw: HardwareParams, cache) -> bool:
+    """Install the newest persisted launch plan for ``kernel``, when safe.
+
+    Shared by ``get_driver``'s lazy disk read-through (a fresh process gets
+    O(1) dispatch without an explicit warm start) and
+    ``warm_start_from_cache``.  A plan is installed only if it was compiled
+    from the exact driver that will serve (same source hash) -- or, with no
+    driver at all, unconditionally: the plan is then the best tuning we
+    have.  Unparseable artifacts and mismatches are left on disk untouched.
+    Returns whether a plan was registered.
+    """
+    from .plan import LaunchPlanTable
+
+    entry = cache.lookup_latest_plan(kernel, hw_name=hw.name)
+    if entry is None:
+        return False
+    try:
+        table = LaunchPlanTable.from_json(entry.plan)
+    except (KeyError, ValueError, TypeError):
+        return False
+    if drv is not None and table.source_hash != drv.source_hash:
+        return False
+    registry.register_plan(table)
+    return True
+
+
+class WarmStartSummary(list):
+    """Loaded kernel names (a plain list, for compatibility) plus warm-start
+    coverage counts: how many kernels were skipped because no artifact
+    matched (``skipped_no_entry``), failed to load (``skipped_bad``), or
+    were already registered (``already_registered``), and which compiled
+    launch plans were installed (``plans_loaded``)."""
+
+    def __init__(self, loaded: list[str] | None = None) -> None:
+        super().__init__(loaded or [])
+        self.already_registered = 0
+        self.skipped_no_entry = 0
+        self.skipped_bad = 0
+        self.plans_loaded: list[str] = []
+
+    @property
+    def loaded(self) -> list[str]:
+        return list(self)
+
+    def as_dict(self) -> dict:
+        return {
+            "loaded": list(self),
+            "plans_loaded": list(self.plans_loaded),
+            "already_registered": self.already_registered,
+            "skipped_no_entry": self.skipped_no_entry,
+            "skipped_bad": self.skipped_bad,
+        }
+
+    def __repr__(self) -> str:
+        return (f"WarmStartSummary(loaded={list(self)!r}, "
+                f"plans_loaded={self.plans_loaded!r}, "
+                f"already_registered={self.already_registered}, "
+                f"skipped_no_entry={self.skipped_no_entry}, "
+                f"skipped_bad={self.skipped_bad})")
+
+
 def warm_start_from_cache(kernels: list[str] | None = None,
-                          hw: HardwareParams = V5E) -> list[str]:
+                          hw: HardwareParams = V5E,
+                          plans: bool = True) -> WarmStartSummary:
     """Pre-load cached drivers into the registry (serving-process startup).
 
     ``kernels=None`` loads every kernel present in the cache.  Kernels
     already registered are left untouched; entries tuned for a different
     device than ``hw``, and entries whose stored source fails to load
-    (one-time warning), are skipped.  Returns the loaded names.
+    (one-time warning), are skipped.  With ``plans=True`` the newest
+    compiled launch plan for each kernel is installed too, when it matches
+    the driver that will serve (same source hash) -- a plan artifact can
+    even serve alone when its driver entry is gone.  Returns a
+    ``WarmStartSummary``: the loaded names (list-compatible) plus
+    loaded/skipped coverage counts, so serving processes and benchmarks can
+    report how much of the fleet's tuning work they inherited.
     """
     from .cache import default_cache
 
     cache = default_cache()
     names = kernels if kernels is not None else cache.kernels()
-    loaded = []
+    summary = WarmStartSummary()
     for name in names:
-        if registry.get(name) is not None:
+        drv = registry.get(name)
+        if drv is not None:
+            summary.already_registered += 1
+        else:
+            entry = cache.lookup_latest(name, hw_name=hw.name)
+            if entry is None:
+                summary.skipped_no_entry += 1
+            else:
+                drv = _driver_from_entry(name, entry, hw)
+                if drv is None:
+                    summary.skipped_bad += 1
+                else:
+                    registry.register(drv)
+                    summary.append(name)
+        if not plans or registry.plan(name, hw.name) is not None:
             continue
-        entry = cache.lookup_latest(name, hw_name=hw.name)
-        if entry is None:
-            continue
-        drv = _driver_from_entry(name, entry, hw)
-        if drv is None:
-            continue
-        registry.register(drv)
-        loaded.append(name)
-    return loaded
+        if _install_plan_if_matching(name, drv, hw, cache):
+            summary.plans_loaded.append(name)
+    return summary
 
 
 def choose_or_default(kernel: str, D: Dims,
@@ -348,8 +577,14 @@ def choose_or_default(kernel: str, D: Dims,
                       device=None,
                       strategy=None,
                       budget=None) -> dict[str, int]:
-    """Tuned launch parameters if a driver is registered or cached, else
-    ``default`` -- or, opt-in, a budgeted online search.
+    """Tuned launch parameters if a plan, driver, or cache entry covers the
+    shape, else ``default`` -- or, opt-in, a budgeted online search.
+
+    Dispatch order: a telemetry-pinned per-shape override (measured
+    evidence) outranks everything; then the compiled launch plan (O(1)
+    probe of precomputed choices -- see core/plan.py); then the driver's
+    vectorized rational-program evaluation (whose per-shape results lazily
+    join the plan); then the search escalation or the static default.
 
     This keeps model code runnable before any tuning has happened (the
     untuned path uses the static heuristic config, like un-instrumented CUDA
@@ -388,12 +623,30 @@ def choose_or_default(kernel: str, D: Dims,
                 pred = None
         _notify(kernel, D, override, "override", pred, hw)
         return dict(override)
+    # Compiled launch plan: the steady-state O(1) dispatch path -- a probe
+    # of the precompiled (shape -> config) table, no rational-program
+    # evaluation.  Plans can serve even with no compiled driver at all
+    # (plan artifacts warm-start independently).
+    plan_cfg = registry.plan_lookup(kernel, hw.name, D)
+    if plan_cfg is not None:
+        pred = None
+        if drv is not None and _choice_listener is not None:
+            try:
+                pred = drv.estimate(D, plan_cfg)
+            except Exception:
+                pred = None
+        _notify(kernel, D, plan_cfg, "plan", pred, hw)
+        return plan_cfg
     if drv is not None:
         try:
             cfg = drv.choose(D)
         except (ValueError, KeyError, TypeError):
             cfg = None  # stale/mismatched driver: search if opted in, else
         if cfg is not None:
+            # Lazy single-shape plan fill: a shape outside the precompiled
+            # envelope pays the rational program once, then dispatches O(1).
+            registry.note_plan_fill(kernel, hw.name, D, cfg,
+                                    source_hash=drv.source_hash)
             pred = None
             if _choice_listener is not None:
                 # The prediction is telemetry garnish: a driver whose

@@ -1,0 +1,364 @@
+"""Compiled launch plans: the precomputed, O(1) form of a driver's choices.
+
+The paper's runtime contract is one cheap IO call per kernel launch
+(Section V-C).  The vectorized ``choose()`` honors it per shape, but a
+serving fleet re-pays a full candidate-table rational-program evaluation for
+every distinct shape in every fresh process.  A *launch plan* removes that:
+the driver's rational program is partially evaluated with respect to the
+data parameters of a whole traffic envelope -- one batched ``choose_many``
+pass over a shapes x configs matrix -- and the resulting (shape -> config)
+map is frozen into an immutable, array-backed ``LaunchPlanTable``.
+
+The table is the steady-state hot path: packed int64 shape keys, an
+open-addressing linear probe over preallocated ndarrays, per-kernel config
+rows stored as one int64 matrix.  A lookup touches a handful of array cells
+-- no candidate enumeration, no rational-function evaluation, no driver
+namespace traffic -- so dispatch cost is independent of the candidate-table
+size.  Tables are stamped with the driver's ``tuning_version``; the
+registry drops them whenever the kernel's driver is swapped
+(``_Registry.invalidate_kernel`` / re-registration), so a drift refit can
+never serve a stale plan.
+
+Plan artifacts persist through ``core/cache.py`` (``PlanEntry``, stored as
+``<kernel>/<key>.plan.json``) and are loaded by ``warm_start_from_cache`` /
+``precompile_plans`` -- a process can serve tuned decisions without even
+compiling the driver module.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["LaunchPlanTable", "compile_plan", "precompile_plans",
+           "pack_shape", "lattice", "plan_key"]
+
+logger = logging.getLogger(__name__)
+
+# One-time flag for the best-effort plan-write warning (a read-only serving
+# node should diagnose once, not once per kernel per restart).
+_plan_write_warned = False
+
+Dims = Mapping[str, int]
+
+_EMPTY = np.int64(-1)          # slot sentinel in the hash column
+
+
+def _mix64(x: int) -> int:
+    """splitmix64 finalizer: avalanche a 64-bit value (stable across runs,
+    unlike Python's salted ``hash``)."""
+    x &= 0xFFFFFFFFFFFFFFFF
+    x = (x ^ (x >> 30)) * 0xBF58476D1CE4E5B9 & 0xFFFFFFFFFFFFFFFF
+    x = (x ^ (x >> 27)) * 0x94D049BB133111EB & 0xFFFFFFFFFFFFFFFF
+    return x ^ (x >> 31)
+
+
+def pack_shape(values: Sequence[int]) -> int:
+    """Pack a shape tuple into one non-negative int64 key.
+
+    Dimensions are mixed (splitmix64 chain) rather than bit-packed so keys
+    never overflow for large extents; the table verifies the raw dimensions
+    on every probe, so a (vanishingly rare) mix collision costs one extra
+    probe step, never a wrong config.
+    """
+    h = 0x9E3779B97F4A7C15
+    for v in values:
+        h = _mix64(h ^ _mix64(int(v)))
+    return h >> 1               # keep it positive in signed int64
+
+
+def lattice(axes: Mapping[str, Sequence[int]]) -> dict[str, np.ndarray]:
+    """Cartesian traffic envelope: per-data-param value lists -> columnar
+    shape table (one int64 column per data param, one row per lattice
+    point).  This is the ``D_table`` that ``choose_many`` and
+    ``compile_plan`` consume."""
+    names = list(axes)
+    grids = np.meshgrid(*[np.asarray(list(axes[n]), dtype=np.int64)
+                          for n in names], indexing="ij")
+    return {n: g.reshape(-1) for n, g in zip(names, grids)}
+
+
+@dataclass
+class LaunchPlanTable:
+    """Immutable array-backed (shape -> launch config) map for one kernel.
+
+    Open-addressing hash table over preallocated ndarrays:
+
+      * ``hashes``  -- (capacity,) int64, packed shape key or -1 for empty,
+      * ``dims``    -- (capacity, n_data_params) int64, raw shape values
+                       (verified on probe: collisions are correctness-safe),
+      * ``rows``    -- (capacity, n_program_params) int64 config rows.
+
+    Capacity is a power of two at load factor <= 0.5, so probes terminate
+    quickly; the table is built once (``build``) and never mutated --
+    concurrent lookups need no lock.
+    """
+
+    kernel: str
+    hw_name: str
+    data_params: tuple[str, ...]
+    program_params: tuple[str, ...]
+    tuning_version: int
+    hashes: np.ndarray = field(repr=False)
+    dims: np.ndarray = field(repr=False)
+    rows: np.ndarray = field(repr=False)
+    n_entries: int = 0
+    # Hash of the driver source this plan was compiled from: the registry
+    # refuses to keep a plan alongside a driver it was not derived from.
+    source_hash: str = ""
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, kernel: str, hw_name: str,
+              data_params: Sequence[str], program_params: Sequence[str],
+              shapes: Mapping[str, np.ndarray],
+              configs: Mapping[str, np.ndarray],
+              ok: np.ndarray | None = None,
+              tuning_version: int = 0,
+              source_hash: str = "") -> "LaunchPlanTable":
+        """Freeze columnar (shapes, configs) -- e.g. a ``choose_many``
+        result -- into a probe table.  Rows where ``ok`` is False are
+        dropped; duplicate shapes keep their last config."""
+        data_params = tuple(data_params)
+        program_params = tuple(program_params)
+        shape_cols = [np.asarray(shapes[d], dtype=np.int64).reshape(-1)
+                      for d in data_params]
+        cfg_cols = [np.asarray(configs[p], dtype=np.int64).reshape(-1)
+                    for p in program_params]
+        n = shape_cols[0].shape[0] if shape_cols else 0
+        keep = (np.ones(n, dtype=bool) if ok is None
+                else np.asarray(ok, dtype=bool))
+        n_keep = int(np.count_nonzero(keep))
+        cap = 1
+        while cap < max(2 * n_keep, 2):
+            cap *= 2
+        table = cls(
+            kernel=kernel, hw_name=hw_name, data_params=data_params,
+            program_params=program_params, tuning_version=tuning_version,
+            hashes=np.full(cap, _EMPTY, dtype=np.int64),
+            dims=np.zeros((cap, len(data_params)), dtype=np.int64),
+            rows=np.zeros((cap, len(program_params)), dtype=np.int64),
+            source_hash=source_hash,
+        )
+        for i in range(n):
+            if not keep[i]:
+                continue
+            table._insert(tuple(int(c[i]) for c in shape_cols),
+                          tuple(int(c[i]) for c in cfg_cols))
+        return table
+
+    def _insert(self, key: tuple[int, ...], cfg: tuple[int, ...]) -> None:
+        cap = self.hashes.shape[0]
+        h = pack_shape(key)
+        slot = h & (cap - 1)
+        while True:
+            stored = int(self.hashes[slot])
+            if stored == int(_EMPTY):
+                self.hashes[slot] = h
+                self.dims[slot] = key
+                self.rows[slot] = cfg
+                self.n_entries += 1
+                return
+            if stored == h and tuple(int(v) for v in self.dims[slot]) == key:
+                self.rows[slot] = cfg          # duplicate shape: last wins
+                return
+            slot = (slot + 1) & (cap - 1)
+
+    # -- the hot path --------------------------------------------------------
+    def lookup_key(self, key: tuple[int, ...]) -> dict[str, int] | None:
+        """Config for an exact shape tuple (data_params order), or None."""
+        hashes = self.hashes
+        cap = hashes.shape[0]
+        h = pack_shape(key)
+        slot = h & (cap - 1)
+        while True:
+            stored = int(hashes[slot])
+            if stored == int(_EMPTY):
+                return None
+            if stored == h:
+                dims = self.dims[slot]
+                for i, v in enumerate(key):
+                    if int(dims[i]) != v:
+                        break
+                else:
+                    row = self.rows[slot]
+                    return {p: int(row[i])
+                            for i, p in enumerate(self.program_params)}
+            slot = (slot + 1) & (cap - 1)
+
+    def lookup(self, D: Dims) -> dict[str, int] | None:
+        """Config for data parameters ``D`` (extra keys ignored), or None --
+        including when ``D`` is missing one of this plan's data params."""
+        try:
+            key = tuple(int(D[d]) for d in self.data_params)
+        except (KeyError, TypeError, ValueError):
+            return None
+        return self.lookup_key(key)
+
+    def __len__(self) -> int:
+        return self.n_entries
+
+    def entries(self) -> list[tuple[dict[str, int], dict[str, int]]]:
+        """(shape, config) pairs in slot order (tests / introspection)."""
+        out = []
+        for slot in np.flatnonzero(self.hashes != _EMPTY):
+            out.append((
+                {d: int(self.dims[slot][i])
+                 for i, d in enumerate(self.data_params)},
+                {p: int(self.rows[slot][i])
+                 for i, p in enumerate(self.program_params)},
+            ))
+        return out
+
+    # -- persistence ---------------------------------------------------------
+    def to_json(self) -> dict:
+        """JSON-able payload (dense rows, rebuilt into a probe table on
+        load -- capacity is an implementation detail, not an artifact)."""
+        used = np.flatnonzero(self.hashes != _EMPTY)
+        return {
+            "kernel": self.kernel,
+            "hw_name": self.hw_name,
+            "data_params": list(self.data_params),
+            "program_params": list(self.program_params),
+            "tuning_version": self.tuning_version,
+            "source_hash": self.source_hash,
+            "shapes": self.dims[used].tolist(),
+            "configs": self.rows[used].tolist(),
+        }
+
+    @classmethod
+    def from_json(cls, raw: Mapping[str, Any]) -> "LaunchPlanTable":
+        data_params = tuple(raw["data_params"])
+        program_params = tuple(raw["program_params"])
+        shapes = np.asarray(raw["shapes"], dtype=np.int64).reshape(
+            -1, len(data_params))
+        configs = np.asarray(raw["configs"], dtype=np.int64).reshape(
+            -1, len(program_params))
+        return cls.build(
+            raw["kernel"], raw["hw_name"], data_params, program_params,
+            shapes={d: shapes[:, i] for i, d in enumerate(data_params)},
+            configs={p: configs[:, i] for i, p in enumerate(program_params)},
+            tuning_version=int(raw.get("tuning_version", 0)),
+            source_hash=raw.get("source_hash", ""),
+        )
+
+
+def plan_key(kernel: str, hw_name: str,
+             envelope: Mapping[str, Sequence[int]] | Mapping[str, np.ndarray],
+             tuning_version: int = 0, source_hash: str = "") -> str:
+    """Content address of one compiled plan: kernel + device + envelope +
+    the exact driver it partially evaluates (source hash + tuning
+    generation) -- a refit, a rebuilt driver, or a different envelope is a
+    different artifact by construction."""
+    import hashlib
+
+    payload = {
+        "kernel": kernel,
+        "hw_name": hw_name,
+        "tuning_version": tuning_version,
+        "source_hash": source_hash,
+        "envelope": {k: np.asarray(v, dtype=np.int64).reshape(-1).tolist()
+                     for k, v in sorted(envelope.items())},
+    }
+    return hashlib.sha256(json.dumps(
+        payload, sort_keys=True, separators=(",", ":")).encode()).hexdigest()
+
+
+def compile_plan(driver, D_table: Mapping[str, Sequence[int]],
+                 margin: float = 0.02) -> LaunchPlanTable:
+    """Partially evaluate a driver over a traffic envelope into a plan.
+
+    ``D_table`` is columnar: aligned per-data-param value columns, one row
+    per shape (build one from per-axis value lists with ``lattice``).  One
+    ``choose_many`` broadcast pass decides every shape, and the feasible
+    rows are frozen into a ``LaunchPlanTable`` stamped with the driver's
+    tuning generation.
+    """
+    cols = {d: np.asarray(D_table[d], dtype=np.int64).reshape(-1)
+            for d in driver.data_params}
+    configs, ok = driver.choose_many(cols, margin=margin)
+    return LaunchPlanTable.build(
+        kernel=driver.kernel,
+        hw_name=driver.hw.name,
+        data_params=driver.data_params,
+        program_params=driver.program_params,
+        shapes=cols, configs=configs, ok=ok,
+        tuning_version=driver.tuning_version,
+        source_hash=driver.source_hash,
+    )
+
+
+def precompile_plans(
+    envelopes: Mapping[str, Mapping[str, Sequence[int]]],
+    hw=None,
+    cache: bool = True,
+    margin: float = 0.02,
+) -> dict:
+    """Warm-start plan compilation for a serving process's traffic envelope.
+
+    For each ``kernel -> {data_param: values}`` entry: use the persisted
+    plan artifact when one matches the current driver generation, otherwise
+    run one ``choose_many`` pass over the envelope lattice, register the
+    table with the process registry, and (``cache=True``) write the artifact
+    through ``core/cache.py`` for the rest of the fleet.  Kernels with no
+    driver (registered or cached) are skipped -- the lazy single-shape fill
+    in ``choose_or_default`` covers them once a driver appears.
+
+    Returns a summary dict: ``compiled`` / ``loaded`` / ``skipped`` kernel
+    lists and total ``entries``.
+    """
+    import time
+
+    from .cache import PlanEntry, default_cache
+    from .device_model import V5E
+    from .driver import get_driver, registry
+
+    hw = hw if hw is not None else V5E
+    store = default_cache() if cache else None
+    summary: dict[str, Any] = {"compiled": [], "loaded": [], "skipped": [],
+                               "entries": 0}
+    for kernel, axes in envelopes.items():
+        driver = get_driver(kernel, hw=hw)
+        if driver is None:
+            summary["skipped"].append(kernel)
+            continue
+        key = plan_key(kernel, hw.name, axes, driver.tuning_version,
+                       driver.source_hash)
+        plan = None
+        if store is not None:
+            entry = store.get_plan(kernel, key)
+            if entry is not None:
+                try:
+                    plan = LaunchPlanTable.from_json(entry.plan)
+                    summary["loaded"].append(kernel)
+                except (KeyError, ValueError, TypeError):
+                    plan = None
+        if plan is None:
+            plan = compile_plan(driver, lattice(axes), margin=margin)
+            summary["compiled"].append(kernel)
+            if store is not None:
+                # Persistence is best-effort: an unwritable cache dir
+                # (read-only serving node) keeps the compiled plan serving
+                # this process, it just does not share it with the fleet.
+                global _plan_write_warned
+                try:
+                    store.put_plan(PlanEntry(
+                        kernel=kernel, key=key, hw_name=hw.name,
+                        plan=plan.to_json(), created_at=time.time(),
+                        tuning_version=driver.tuning_version))
+                except OSError as e:
+                    if not _plan_write_warned:
+                        _plan_write_warned = True
+                        logger.warning(
+                            "launch-plan artifact write failed (%s) for "
+                            "kernel %s; plans will not persist -- every "
+                            "process recompiles its envelope (set "
+                            "KLARAPTOR_CACHE_DIR to a writable path)",
+                            e, kernel)
+        registry.register_plan(plan)
+        summary["entries"] += len(plan)
+    return summary

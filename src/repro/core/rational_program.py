@@ -27,7 +27,7 @@ them.)
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Iterable, Mapping
 
 import numpy as np
@@ -37,7 +37,7 @@ from .rational import RationalFunction, clamp_from_zero
 __all__ = [
     "Expr", "Var", "Const", "BinOp", "Floor", "Ceil", "Min", "Max",
     "Select", "Fitted", "RationalProgram",
-    "var", "const", "floor_div", "ceil_div",
+    "var", "const", "floor_div", "ceil_div", "specialize_expr",
 ]
 
 Env = Mapping[str, np.ndarray]
@@ -100,6 +100,19 @@ class Expr:
         for k in kids:
             prod *= k.count_pieces()
         return prod
+
+    def specialize(self, bindings: Mapping[str, float]) -> "Expr":
+        """Partial evaluation: bind some free variables, fold constants.
+
+        This is the launch-plan compilation primitive: specializing the
+        rational program with respect to the data parameters D collapses
+        every subexpression that depends only on D into a ``Const`` and
+        folds decision nodes whose conditions became constant -- the
+        remaining program is a (usually much smaller) rational function of
+        the program parameters alone, and its piece count shrinks
+        accordingly.  Unbound variables are left symbolic.
+        """
+        return specialize_expr(self, bindings)
 
 
 def _wrap(x) -> Expr:
@@ -255,24 +268,85 @@ class Fitted(Expr):
     """Process node whose rational function was determined by curve fitting.
 
     Section III-A: the decision nodes of the flowchart are known, the process
-    nodes are fitted RationalFunctions g_i(D, P).
+    nodes are fitted RationalFunctions g_i(D, P).  ``bound`` carries partial
+    application (``specialize`` pins some inputs to constants): a
+    RationalFunction has no partially-applied form, so the pinned values are
+    merged into the environment at evaluation time instead.
     """
 
     name: str
     fn: RationalFunction
+    bound: dict = field(default_factory=dict)
 
     def eval(self, env: Env) -> np.ndarray:
-        cols = [np.asarray(env[v], dtype=np.float64) for v in self.fn.var_names]
-        cols = np.broadcast_arrays(*cols)
+        def col(v):
+            x = self.bound[v] if v in self.bound else env[v]
+            return np.asarray(x, dtype=np.float64)
+
+        cols = np.broadcast_arrays(*[col(v) for v in self.fn.var_names])
         shape = cols[0].shape
         X = np.stack([c.ravel() for c in cols], axis=-1)
         return self.fn(X).reshape(shape) if shape else self.fn(X)[0]
 
     def to_source(self, vector: bool = False) -> str:
+        if self.bound:
+            # The emitted source would still reference the pinned names;
+            # codegen only ever emits unspecialized Fitted nodes.
+            raise NotImplementedError(
+                "cannot emit source for a partially-applied Fitted node")
         return self.fn.to_source()
 
     def children(self):
         return ()
+
+
+# -- partial evaluation (launch-plan compilation) ----------------------------
+
+def specialize_expr(e: Expr, bindings: Mapping[str, float]) -> Expr:
+    """Substitute ``bindings`` into ``e`` and constant-fold in one pass.
+
+    Folding uses the same numeric semantics as ``eval`` (including the
+    division-by-zero clamp), so a fully-bound expression specializes to the
+    exact ``Const`` that evaluating it would produce.  ``Select`` nodes with
+    a constant condition reduce to the taken branch -- decision diamonds of
+    the Fig. 2 flowchart disappear once D is known.
+    """
+    if isinstance(e, Var):
+        if e.name in bindings:
+            return Const(float(bindings[e.name]))
+        return e
+    if isinstance(e, Const):
+        return e
+    if isinstance(e, Fitted):
+        # A RationalFunction leaf folds to a constant when every input is
+        # bound; a partial binding is carried as pinned values on the node
+        # (there is no partially-applied RationalFunction form), so the
+        # specialized program really only needs the still-free names.
+        merged = dict(e.bound)
+        merged.update({v: float(bindings[v]) for v in e.fn.var_names
+                       if v in bindings})
+        if all(v in merged for v in e.fn.var_names):
+            return Const(float(Fitted(e.name, e.fn).eval(merged)))
+        if merged == e.bound:
+            return e
+        return Fitted(e.name, e.fn, merged)
+    if isinstance(e, Select):
+        cond = specialize_expr(e.cond, bindings)
+        if isinstance(cond, Const):
+            taken = e.if_true if cond.value else e.if_false
+            return specialize_expr(taken, bindings)
+        return Select(cond, specialize_expr(e.if_true, bindings),
+                      specialize_expr(e.if_false, bindings))
+    if isinstance(e, (BinOp, Min, Max, Floor, Ceil)):
+        kids = [specialize_expr(k, bindings) for k in e.children()]
+        if isinstance(e, BinOp):
+            out: Expr = BinOp(e.op, *kids)
+        else:
+            out = type(e)(*kids)
+        if all(isinstance(k, Const) for k in kids):
+            return Const(float(out.eval({})))
+        return out
+    raise TypeError(f"cannot specialize expression node {type(e).__name__}")
 
 
 # -- helpers matching Definition 1's extensions ------------------------------
@@ -321,6 +395,25 @@ class RationalProgram:
 
     def count_pieces(self) -> int:
         return self.outputs[self.primary].count_pieces()
+
+    def specialize(self, bindings: Mapping[str, float]) -> "RationalProgram":
+        """Partially evaluate every output with respect to ``bindings``.
+
+        Specializing on the data parameters D is the compile step of a
+        launch plan: the returned program depends only on the still-free
+        inputs (typically the program parameters P), D-only subexpressions
+        are folded to constants, and decision nodes whose conditions were
+        decided by D are gone -- evaluating it over a candidate table does
+        strictly less work than the general program.
+        """
+        return RationalProgram(
+            name=f"{self.name}@" + ",".join(
+                f"{k}={int(v)}" for k, v in sorted(bindings.items())),
+            inputs=tuple(i for i in self.inputs if i not in bindings),
+            outputs={k: e.specialize(bindings)
+                     for k, e in self.outputs.items()},
+            primary=self.primary,
+        )
 
     # -- flowchart export (Fig. 2 style) -------------------------------------
     def to_flowchart(self) -> str:

@@ -160,7 +160,8 @@ class Klaraptor:
             entry = self.cache.get(spec.name, key)
             if entry is not None:
                 driver = DriverProgram.from_source(
-                    spec.name, entry.source, self.hw)
+                    spec.name, entry.source, self.hw,
+                    tuning_version=entry.tuning_version)
                 if register:
                     register_driver(driver)
                 return BuildResult(
@@ -191,7 +192,8 @@ class Klaraptor:
             spec, {m: f.function for m, f in fits.items()}, self.hw)
         source = generate_driver_source(
             spec, program, {m: f.function for m, f in fits.items()}, self.hw)
-        driver = DriverProgram.from_source(spec.name, source, self.hw)
+        driver = DriverProgram.from_source(spec.name, source, self.hw,
+                                           tuning_version=cache_version)
         if register:
             register_driver(driver)
         if self.cache is not None and key is not None:

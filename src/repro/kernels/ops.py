@@ -14,11 +14,16 @@ analogue of the paper's per-invocation decision with its runtime history.
 ``choose_or_default`` reads through the persistent driver-artifact cache
 (core/cache.py): a driver tuned by any earlier process is loaded from disk on
 first use, so these ops warm-start with tuned launch parameters even in a
-process that never ran the tuner.  Inside the loaded driver the decision is
-one vectorized rational-program evaluation over the whole candidate table.
+process that never ran the tuner.  When a compiled launch plan covers the
+shape (core/plan.py -- precompiled over the serving traffic envelope, lazily
+filled for stragglers) dispatch is an O(1) probe of the plan table;
+otherwise the loaded driver makes the decision in one vectorized
+rational-program evaluation over the whole candidate table.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -41,9 +46,14 @@ GMM_DEFAULT = {"bg": 128, "bn": 512, "bk": 512}
 SSD_DEFAULT = {"chunk": 256}
 
 
+@functools.lru_cache(maxsize=4096)
 def _fit_tile(size: int, tile: int, align: int) -> int:
     """Largest divisor of ``size`` that is <= tile and a multiple of
-    ``align`` -- keeps tuned tiles valid for shapes the tuner never saw."""
+    ``align`` -- keeps tuned tiles valid for shapes the tuner never saw.
+
+    Memoized: the O(tile/align) scan-down loop would otherwise re-run on
+    every trace-time dispatch of every op, and (size, tile, align) triples
+    recur heavily under steady traffic."""
     tile = min(tile, size)
     t = (tile // align) * align
     while t > align and size % t:

@@ -9,7 +9,11 @@ the KV cache, and KLARAPTOR decode-launch decisions):
 ``--telemetry`` opts into the runtime observability + drift-adaptive
 retuning loop (repro.telemetry) over the tier-1 kernel specs and prints a
 Prometheus-style metrics dump after the run; ``--telemetry-json PATH``
-writes the full JSON snapshot instead.
+writes the full JSON snapshot instead.  ``--plans`` precompiles launch
+plans over a default batch x seq traffic envelope for every warm-started
+tier-1 kernel (one batched ``choose_many`` pass each, persisted through
+the artifact cache), making steady-state dispatch an O(1) plan-table
+probe.
 """
 
 from __future__ import annotations
@@ -23,7 +27,29 @@ from repro.distributed.sharding import Sharder, decode_rules
 from repro.models import Model, init_params
 from repro.serving import Request, ServingEngine
 
-__all__ = ["main", "build_engine", "build_telemetry"]
+__all__ = ["main", "build_engine", "build_telemetry",
+           "default_plan_envelope"]
+
+
+def default_plan_envelope(batch: int, max_seq: int) -> dict:
+    """Decode-traffic lattice for the tier-1 kernels: the shapes a serving
+    process is expected to dispatch, expressed as per-data-param value
+    lists (the envelope ``precompile_plans`` compiles in one
+    ``choose_many`` pass per kernel).  Infeasible lattice points are
+    dropped at compile time, so over-approximating costs only table
+    entries."""
+    seqs = [s for s in (128, 256, 512, 1024, 2048, 4096)
+            if s <= max_seq] or [max_seq]
+    dims = [1024, 2048, 4096]
+    heads = sorted({max(1, batch) * h for h in (8, 16, 32)})
+    return {
+        "matmul_b16": {"m": sorted({max(8, batch), 128, 1024}),
+                       "n": dims, "k": dims},
+        "flash_attn_d128_causal": {"bh": heads, "sq": seqs, "skv": seqs},
+        "moe_gmm_b16": {"e": [8], "g": [256, 512, 1024],
+                        "k": [1024, 2048], "n": [1024, 2048]},
+        "ssd_scan_h64_n128": {"bh": heads, "s": seqs, "chunkflops": [1]},
+    }
 
 
 def build_telemetry(seed: int = 0):
@@ -38,13 +64,15 @@ def build_telemetry(seed: int = 0):
 
 
 def build_engine(cfg, batch: int, max_seq: int, mesh=None, params=None,
-                 seed: int = 0, telemetry=None) -> ServingEngine:
+                 seed: int = 0, telemetry=None,
+                 plan_envelope=None) -> ServingEngine:
     model = Model(cfg)
     sharder = Sharder(mesh=mesh, rules=decode_rules())
     if params is None:
         params = init_params(model.specs(), jax.random.PRNGKey(seed))
     return ServingEngine(model, params, sharder, batch=batch,
-                         max_seq=max_seq, telemetry=telemetry)
+                         max_seq=max_seq, telemetry=telemetry,
+                         plan_envelope=plan_envelope)
 
 
 def main() -> None:
@@ -61,11 +89,28 @@ def main() -> None:
     ap.add_argument("--telemetry-json", metavar="PATH", default=None,
                     help="with --telemetry: write the JSON snapshot here "
                          "instead of printing Prometheus text")
+    ap.add_argument("--plans", action="store_true",
+                    help="precompile launch plans for the default decode "
+                         "traffic envelope at warm start (O(1) dispatch)")
     args = ap.parse_args()
 
     telemetry = build_telemetry() if args.telemetry else None
     cfg = get_config(args.arch, smoke=args.smoke)
-    engine = build_engine(cfg, args.batch, args.max_seq, telemetry=telemetry)
+    envelope = (default_plan_envelope(args.batch, args.max_seq)
+                if args.plans else None)
+    engine = build_engine(cfg, args.batch, args.max_seq, telemetry=telemetry,
+                          plan_envelope=envelope)
+    ws = engine.warm_started
+    print(f"warm start: {len(ws)} driver(s) loaded {list(ws)}, "
+          f"{len(ws.plans_loaded)} plan(s), "
+          f"{ws.skipped_no_entry} without artifacts, "
+          f"{ws.skipped_bad} unloadable")
+    if args.plans:
+        ps = engine.plan_summary
+        print(f"launch plans: {len(ps['compiled'])} compiled, "
+              f"{len(ps['loaded'])} loaded from cache, "
+              f"{len(ps['skipped'])} skipped (no driver), "
+              f"{ps['entries']} plan entries")
     for i in range(args.requests):
         prompt = [2 + (i * 7 + j) % (cfg.vocab_size - 3)
                   for j in range(4 + i % 4)]

@@ -13,7 +13,13 @@ for the current shapes (once, then memoized) -- the serving-side face of the
 paper's "optimal values ... for each kernel launch independently".  At
 startup the engine warm-starts every tuned driver found in the persistent
 artifact cache (core/cache.py), so a fleet of serving processes shares one
-tuning run instead of each re-deriving launch parameters.  For shapes with
+tuning run instead of each re-deriving launch parameters.  Passing
+``plan_envelope`` (kernel -> per-data-param value lists) additionally
+precompiles *launch plans* for the expected traffic lattice: one batched
+``choose_many`` pass per kernel turns the whole envelope into an O(1)
+dispatch table (core/plan.py), persisted through the artifact cache so the
+rest of the fleet loads it instead of recompiling; shapes outside the
+envelope lazily join the plan after one driver decision.  For shapes with
 *no* cached driver, ``tune_for_shape`` runs a budget-aware online search
 (repro.search) instead of falling back to static defaults forever.
 
@@ -52,7 +58,7 @@ class Request:
 class ServingEngine:
     def __init__(self, model, params, sharder, batch: int, max_seq: int,
                  eos_id: int = 1, seed: int = 0, warm_start: bool = True,
-                 telemetry=None):
+                 telemetry=None, plan_envelope=None):
         self.model = model
         self.params = params
         self.sharder = sharder
@@ -69,12 +75,24 @@ class ServingEngine:
         self.telemetry = telemetry
         if telemetry is not None:
             telemetry.install()
-        # Load tuned drivers persisted by earlier tuning/serving processes so
-        # the first decode step already launches with optimal parameters.
-        self.warm_started: list[str] = \
-            warm_start_from_cache() if warm_start else []
+        # Load tuned drivers (and any persisted launch plans) from the
+        # artifact cache so the first decode step already launches with
+        # optimal parameters.  ``warm_started`` is the loaded-names list
+        # with coverage counts attached (WarmStartSummary).
+        from repro.core.driver import WarmStartSummary
+        self.warm_started: WarmStartSummary = \
+            warm_start_from_cache() if warm_start else WarmStartSummary()
         if telemetry is not None:
             telemetry.note_warm_start(self.warm_started)
+        # Precompile launch plans over the declared traffic envelope:
+        # kernel name -> {data param: candidate values}.  One choose_many
+        # pass per kernel; kernels with no driver are skipped (lazy fill
+        # covers them once tuning appears).
+        self.plan_summary: dict = {"compiled": [], "loaded": [],
+                                   "skipped": [], "entries": 0}
+        if plan_envelope:
+            from repro.core.plan import precompile_plans
+            self.plan_summary = precompile_plans(plan_envelope)
 
         self.cache = model.init_cache(batch, max_seq)
         self.slot_req: list[Request | None] = [None] * batch

@@ -20,6 +20,12 @@ Counter semantics (all monotonic within a process):
   * ``disk_cache_hits`` / ``disk_cache_misses`` -- driver-artifact cache
     read-throughs (from the registry, so they count even before telemetry
     is installed).
+  * ``plan_hits`` / ``plan_misses`` -- compiled-launch-plan dispatches
+    (the O(1) hot path of core/plan.py) vs envelope misses that fell back
+    to the driver; ``choose_many_calls`` / ``choose_many_rows`` -- batched
+    multi-shape selection passes and their total batch size (how much plan
+    compilation happened, and how wide).  ``plan`` also appears as its own
+    ``choices_by_source`` bucket.
 """
 
 from __future__ import annotations
@@ -75,6 +81,10 @@ class MetricsExporter:
             "warm_started_kernels": c.warm_started_kernels,
             "disk_cache_hits": reg["disk_cache_hits"],
             "disk_cache_misses": reg["disk_cache_misses"],
+            "plan_hits": reg.get("plan_hits", 0),
+            "plan_misses": reg.get("plan_misses", 0),
+            "choose_many_calls": reg.get("choose_many_calls", 0),
+            "choose_many_rows": reg.get("choose_many_rows", 0),
         }
         keys = [{
             "kernel": s.kernel,
@@ -128,6 +138,8 @@ class MetricsExporter:
                      "refits_total", "refit_failures_total",
                      "refit_device_seconds_total", "overrides_total",
                      "disk_cache_hits", "disk_cache_misses",
+                     "plan_hits", "plan_misses",
+                     "choose_many_calls", "choose_many_rows",
                      "warm_started_kernels"):
             lines.append(f"# TYPE {prefix}_{name} counter")
             counter(name, c[name])

@@ -1,0 +1,552 @@
+"""Compiled launch plans: batched choose_many, the LaunchPlanTable hot
+path, plan artifacts in the cache, and invalidation on refit/hot-swap.
+
+The load-bearing property is exact agreement: ``choose_many`` must pick the
+bit-identical config that per-shape ``choose`` picks (same occupancy-margin
+tie-break) on every tier-1 kernel, and a plan entry must never outlive the
+driver generation it was compiled from.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (DriverCache, DriverProgram, Klaraptor, PlanEntry,
+                        V5E, V5eSimulator, choose_or_default, compile_plan,
+                        flash_attention_spec, lattice, matmul_spec,
+                        moe_gmm_spec, precompile_plans, registry,
+                        set_choice_listener, ssd_scan_spec,
+                        warm_start_from_cache)
+from repro.core.plan import LaunchPlanTable, pack_shape, plan_key
+
+SPECS = {
+    "matmul": matmul_spec,
+    "flash": flash_attention_spec,
+    "moe": moe_gmm_spec,
+    "ssd": ssd_scan_spec,
+}
+
+ENVELOPES = {
+    "matmul": {"m": [512, 1024, 2048, 4096], "n": [512, 1024, 2048, 4096],
+               "k": [512, 1024]},
+    "flash": {"bh": [2, 8], "sq": [512, 1024, 2048, 4096],
+              "skv": [1024, 2048]},
+    "moe": {"e": [2, 8], "g": [256, 1024], "k": [512, 1024],
+            "n": [512, 1024]},
+    "ssd": {"bh": [2, 8], "s": [1024, 2048, 4096], "chunkflops": [1]},
+}
+
+
+@pytest.fixture(scope="module")
+def builds():
+    """One driver per tier-1 spec, built once (registry untouched)."""
+    sim = V5eSimulator(noise=0.03, seed=7)
+    kl = Klaraptor(sim, cache=False)
+    return {name: kl.build_driver(fn(), repeats=2, max_configs_per_size=16,
+                                  register=False)
+            for name, fn in SPECS.items()}
+
+
+@pytest.fixture()
+def clean(tmp_path, monkeypatch):
+    monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(tmp_path / "cache"))
+    registry.clear()
+    set_choice_listener(None)
+    yield
+    registry.clear()
+    set_choice_listener(None)
+
+
+def _rows(driver, cols):
+    n = next(iter(cols.values())).shape[0]
+    return [{d: int(cols[d][i]) for d in driver.data_params}
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# choose_many: batched selection must agree exactly with choose()
+# ---------------------------------------------------------------------------
+
+class TestChooseMany:
+    @pytest.mark.parametrize("name", sorted(SPECS))
+    def test_agrees_with_choose(self, builds, name):
+        driver = builds[name].driver
+        cols = lattice(ENVELOPES[name])
+        cfgs, ok = driver.choose_many(cols)
+        for i, D in enumerate(_rows(driver, cols)):
+            driver.namespace["_HISTORY"].clear()
+            ref = driver.choose(D)
+            assert bool(ok[i]), (name, D)
+            assert ref == {p: int(cfgs[p][i])
+                           for p in driver.program_params}, (name, D)
+
+    @pytest.mark.parametrize("margin", [0.0, 0.1])
+    def test_margin_tiebreak_agrees(self, builds, margin):
+        # A widened margin exercises the pipeline-buffers/grid-steps
+        # tie-break over many near-optimal rows; agreement must hold there
+        # too, not just at the argmin.
+        driver = builds["matmul"].driver
+        cols = lattice(ENVELOPES["matmul"])
+        cfgs, ok = driver.choose_many(cols, margin=margin)
+        for i, D in enumerate(_rows(driver, cols)):
+            driver.namespace["_HISTORY"].clear()
+            assert driver.choose(D, margin=margin) == {
+                p: int(cfgs[p][i]) for p in driver.program_params}
+
+    def test_infeasible_shapes_flagged(self, builds):
+        driver = builds["matmul"].driver
+        # k=1: every bk candidate (>=128) exceeds the padded data extent.
+        cols = {"m": np.array([1024, 1024]), "n": np.array([1024, 1024]),
+                "k": np.array([1024, 1])}
+        cfgs, ok = driver.choose_many(cols)
+        assert list(ok) == [True, False]
+        assert all(int(cfgs[p][1]) == 0 for p in driver.program_params)
+        with pytest.raises(ValueError):
+            driver.choose({"m": 1024, "n": 1024, "k": 1})
+
+    def test_fills_decision_history(self, builds):
+        driver = builds["matmul"].driver
+        driver.namespace["_HISTORY"].clear()
+        cols = lattice(ENVELOPES["matmul"])
+        cfgs, ok = driver.choose_many(cols)
+        assert len(driver.namespace["_HISTORY"]) == int(ok.sum())
+        # choose() now serves from the memo: break estimate() to prove no
+        # re-evaluation happens.
+        driver.namespace["estimate"] = None
+        try:
+            D = _rows(driver, cols)[0]
+            assert driver.choose(D) == {p: int(cfgs[p][0])
+                                        for p in driver.program_params}
+        finally:
+            del driver.namespace["estimate"]
+            exec(compile(driver.source, "<d>", "exec"), driver.namespace)
+
+    def test_legacy_driver_fallback(self, builds):
+        """A cached artifact generated before choose_many existed degrades
+        to a per-shape loop with identical results."""
+        modern = builds["flash"].driver
+        ns = dict(modern.namespace)
+        ns.pop("choose_many")
+        legacy = DriverProgram(kernel=modern.kernel, source=modern.source,
+                               namespace=ns, hw=modern.hw)
+        cols = lattice(ENVELOPES["flash"])
+        got, ok_l = legacy.choose_many(cols)
+        want, ok_m = modern.choose_many(cols)
+        assert list(ok_l) == list(ok_m)
+        for p in modern.program_params:
+            assert list(got[p]) == list(want[p])
+
+    def test_scalar_broadcast(self, builds):
+        driver = builds["ssd"].driver
+        cfgs, ok = driver.choose_many(
+            {"bh": 8, "s": np.array([1024, 2048, 4096]), "chunkflops": 1})
+        assert ok.shape == (3,) and ok.all()
+
+
+# ---------------------------------------------------------------------------
+# LaunchPlanTable: packed keys, open addressing, persistence
+# ---------------------------------------------------------------------------
+
+class TestLaunchPlanTable:
+    def _table(self, n=64, tuning_version=3):
+        rng = np.random.RandomState(0)
+        shapes = {"a": rng.randint(1, 1 << 40, n),
+                  "b": rng.randint(1, 1 << 20, n)}
+        configs = {"x": rng.randint(8, 1024, n),
+                   "y": rng.randint(8, 1024, n)}
+        table = LaunchPlanTable.build(
+            "k", V5E.name, ("a", "b"), ("x", "y"), shapes, configs,
+            tuning_version=tuning_version, source_hash="abc123")
+        return table, shapes, configs
+
+    def test_lookup_hit_and_miss(self):
+        table, shapes, configs = self._table()
+        for i in range(len(shapes["a"])):
+            D = {"a": int(shapes["a"][i]), "b": int(shapes["b"][i])}
+            assert table.lookup(D) == {"x": int(configs["x"][i]),
+                                       "y": int(configs["y"][i])}
+        assert table.lookup({"a": 123456789, "b": 42}) is None
+        assert table.lookup({"a": 1}) is None          # missing data param
+
+    def test_load_factor_and_entry_count(self):
+        table, *_ = self._table(n=100)
+        assert len(table) == 100
+        assert table.hashes.shape[0] >= 200        # load factor <= 0.5
+        assert len(table.entries()) == 100
+
+    def test_duplicate_shape_last_wins(self):
+        table = LaunchPlanTable.build(
+            "k", V5E.name, ("a",), ("x",),
+            {"a": np.array([7, 7])}, {"x": np.array([8, 512])})
+        assert len(table) == 1
+        assert table.lookup({"a": 7}) == {"x": 512}
+
+    def test_ok_mask_drops_rows(self):
+        table = LaunchPlanTable.build(
+            "k", V5E.name, ("a",), ("x",),
+            {"a": np.array([1, 2, 3])}, {"x": np.array([10, 20, 30])},
+            ok=np.array([True, False, True]))
+        assert len(table) == 2
+        assert table.lookup({"a": 2}) is None
+
+    def test_json_roundtrip(self):
+        table, shapes, configs = self._table()
+        clone = LaunchPlanTable.from_json(
+            json.loads(json.dumps(table.to_json())))
+        assert clone.tuning_version == table.tuning_version
+        assert clone.source_hash == "abc123"
+        assert clone.data_params == table.data_params
+        assert len(clone) == len(table)
+        for i in range(len(shapes["a"])):
+            D = {"a": int(shapes["a"][i]), "b": int(shapes["b"][i])}
+            assert clone.lookup(D) == table.lookup(D)
+
+    def test_pack_shape_stable_and_positive(self):
+        assert pack_shape((4096, 4096, 512)) == pack_shape((4096, 4096, 512))
+        assert pack_shape((4096, 4096, 512)) != pack_shape((4096, 512, 4096))
+        for v in [(0,), (1 << 62, 1 << 62), (2**40, 3, 5)]:
+            assert 0 <= pack_shape(v) < 2 ** 63
+
+
+# ---------------------------------------------------------------------------
+# Dispatch integration: choose_or_default consults the plan first
+# ---------------------------------------------------------------------------
+
+class TestDispatch:
+    def _install(self, builds, name="matmul", register_driver=True):
+        from repro.core import register_driver as reg
+        driver = builds[name].driver
+        if register_driver:
+            reg(driver)
+        plan = compile_plan(driver, lattice(ENVELOPES[name]))
+        registry.register_plan(plan)
+        return driver, plan
+
+    def test_plan_source_and_config(self, clean, builds):
+        driver, plan = self._install(builds)
+        D = {"m": 1024, "n": 2048, "k": 512}
+        events = []
+        set_choice_listener(events.append)
+        cfg = choose_or_default(driver.kernel, D, {"bm": -1})
+        assert events[-1].source == "plan"
+        driver.namespace["_HISTORY"].clear()
+        assert cfg == driver.choose(D)
+        assert registry.stats()["plan_hits"] == 1
+
+    def test_plan_serves_without_driver(self, clean, builds):
+        """A plan artifact alone (no compiled driver anywhere) dispatches."""
+        driver, plan = self._install(builds, register_driver=False)
+        assert registry.get(driver.kernel) is None
+        D = {"m": 1024, "n": 2048, "k": 512}
+        cfg = choose_or_default(driver.kernel, D, {"bm": -1})
+        assert cfg == plan.lookup(D)
+        assert cfg != {"bm": -1}
+
+    def test_lazy_fill_outside_envelope(self, clean, builds):
+        driver, _ = self._install(builds)
+        D = {"m": 96, "n": 384, "k": 640}        # not a lattice point
+        events = []
+        set_choice_listener(events.append)
+        first = choose_or_default(driver.kernel, D, {"bm": -1})
+        second = choose_or_default(driver.kernel, D, {"bm": -1})
+        assert [e.source for e in events] == ["driver", "plan"]
+        assert first == second
+        stats = registry.stats()
+        assert stats["plan_misses"] == 1 and stats["plan_hits"] == 1
+
+    def test_override_outranks_plan(self, clean, builds):
+        driver, _ = self._install(builds)
+        D = {"m": 1024, "n": 2048, "k": 512}
+        pinned = {"bm": 8, "bn": 128, "bk": 128}
+        registry.note_override(driver.kernel, driver.hw.name, D, pinned)
+        assert choose_or_default(driver.kernel, D, {"bm": -1}) == pinned
+
+    def test_invalidate_kernel_drops_plan_and_fills(self, clean, builds):
+        driver, _ = self._install(builds)
+        D_out = {"m": 96, "n": 384, "k": 640}
+        choose_or_default(driver.kernel, D_out, {"bm": -1})    # lazy fill
+        registry.invalidate_kernel(driver.kernel)
+        assert registry.plan(driver.kernel, driver.hw.name) is None
+        # With plan, fills, and driver gone, dispatch is the default again.
+        assert choose_or_default(driver.kernel, D_out,
+                                 {"bm": -1}) == {"bm": -1}
+
+    def test_new_driver_generation_drops_plan(self, clean, builds):
+        """Registering a *different* driver retires the plan (it is frozen
+        output of the old one); re-registering the same module keeps it."""
+        from repro.core import register_driver as reg
+        driver, plan = self._install(builds)
+        reg(driver)                                   # same source: kept
+        assert registry.plan(driver.kernel, driver.hw.name) is plan
+        other = DriverProgram.from_source(
+            driver.kernel, driver.source + "\n# refit\n", driver.hw,
+            tuning_version=1)
+        reg(other)                                    # new generation
+        assert registry.plan(driver.kernel, driver.hw.name) is None
+
+    def test_stale_fill_rejected_after_hot_swap(self, clean, builds):
+        """A config computed by the pre-refit driver must not be pinned
+        into a plan compiled from the post-refit driver (the race window
+        when a concurrent hot-swap lands between choose and the fill)."""
+        driver, _ = self._install(builds)
+        D = {"m": 96, "n": 384, "k": 640}
+        old_cfg = {"bm": 8, "bn": 128, "bk": 128}
+        registry.note_plan_fill(driver.kernel, driver.hw.name, D, old_cfg,
+                                source_hash="stale-generation")
+        assert registry.plan_lookup(driver.kernel, driver.hw.name, D) is None
+        # the same fill from the plan's own driver is accepted
+        registry.note_plan_fill(driver.kernel, driver.hw.name, D, old_cfg,
+                                source_hash=driver.source_hash)
+        assert registry.plan_lookup(driver.kernel, driver.hw.name,
+                                    D) == old_cfg
+
+    def test_choose_many_counters(self, clean, builds):
+        driver = builds["ssd"].driver
+        driver.choose_many(lattice(ENVELOPES["ssd"]))
+        stats = registry.stats()
+        assert stats["choose_many_calls"] == 1
+        assert stats["choose_many_rows"] == 6
+
+
+# ---------------------------------------------------------------------------
+# Plan artifacts: the new cache entry kind + fleet warm start
+# ---------------------------------------------------------------------------
+
+class TestPlanCache:
+    def _entry(self, version=0, key="p" * 64):
+        table = LaunchPlanTable.build(
+            "k", V5E.name, ("a",), ("x",),
+            {"a": np.array([64, 128])}, {"x": np.array([8, 16])},
+            tuning_version=version)
+        return PlanEntry(kernel="k", key=key, hw_name=V5E.name,
+                         plan=table.to_json(), created_at=1.0,
+                         tuning_version=version)
+
+    def test_put_get_roundtrip(self, clean):
+        cache = DriverCache()
+        cache.put_plan(self._entry())
+        entry = cache.get_plan("k", "p" * 64)
+        assert entry is not None
+        assert LaunchPlanTable.from_json(entry.plan).lookup(
+            {"a": 128}) == {"x": 16}
+
+    def test_lookup_latest_prefers_generation(self, clean):
+        cache = DriverCache()
+        cache.put_plan(self._entry(version=0, key="a" * 64))
+        cache.put_plan(self._entry(version=2, key="b" * 64))
+        assert cache.lookup_latest_plan("k", V5E.name).tuning_version == 2
+
+    def test_tampered_plan_evicted(self, clean):
+        cache = DriverCache()
+        path = cache.put_plan(self._entry())
+        raw = json.load(open(path))
+        raw["tuning_version"] = 99
+        json.dump(raw, open(path, "w"))
+        assert cache.get_plan("k", "p" * 64) is None
+
+    def test_invalidate_below_version_evicts_plans(self, clean):
+        cache = DriverCache()
+        for v, key in ((0, "a" * 64), (1, "b" * 64)):
+            cache.put_plan(self._entry(version=v, key=key))
+        removed = cache.invalidate("k", V5E.name, below_version=1)
+        assert removed == 1
+        assert cache.get_plan("k", "a" * 64) is None
+        assert cache.get_plan("k", "b" * 64) is not None
+
+    def test_plan_files_invisible_to_driver_lookup(self, clean):
+        cache = DriverCache()
+        cache.put_plan(self._entry())
+        assert cache.lookup_latest("k", V5E.name) is None
+
+
+class TestFleetWarmStart:
+    def _build_cached(self):
+        sim = V5eSimulator(noise=0.03, seed=5)
+        kl = Klaraptor(sim)
+        return kl.build_driver(matmul_spec(), repeats=2,
+                               max_configs_per_size=16, register=True)
+
+    def test_precompile_then_fleet_load(self, clean):
+        build = self._build_cached()
+        axes = ENVELOPES["matmul"]
+        first = precompile_plans({build.driver.kernel: axes})
+        assert first["compiled"] == [build.driver.kernel]
+        assert first["entries"] == len(
+            registry.plan(build.driver.kernel, V5E.name))
+
+        # "Second process": fresh registry, everything through artifacts.
+        registry.clear()
+        summary = warm_start_from_cache()
+        assert summary == [build.driver.kernel]
+        assert summary.plans_loaded == [build.driver.kernel]
+        second = precompile_plans({build.driver.kernel: axes})
+        assert second["loaded"] == [build.driver.kernel]   # no recompile
+        D = {"m": 1024, "n": 2048, "k": 512}
+        events = []
+        set_choice_listener(events.append)
+        choose_or_default(build.driver.kernel, D, {"bm": -1})
+        assert events[-1].source == "plan"
+
+    def test_lazy_read_through_installs_plan(self, clean):
+        """A fresh process that never calls warm_start_from_cache still
+        gets O(1) dispatch: get_driver's disk read-through installs the
+        persisted plan compiled from the driver it just loaded."""
+        build = self._build_cached()
+        precompile_plans({build.driver.kernel: ENVELOPES["matmul"]})
+        registry.clear()
+        events = []
+        set_choice_listener(events.append)
+        cfg = choose_or_default(build.driver.kernel,
+                                {"m": 1024, "n": 2048, "k": 512}, {"bm": -1})
+        assert events[-1].source == "plan"
+        assert cfg != {"bm": -1}
+
+    def test_precompile_skips_untuned_kernel(self, clean):
+        summary = precompile_plans({"nonexistent_kernel": {"m": [8]}})
+        assert summary["skipped"] == ["nonexistent_kernel"]
+        assert summary["entries"] == 0
+
+    def test_precompile_survives_unwritable_cache(self, clean, builds,
+                                                  tmp_path, monkeypatch,
+                                                  caplog):
+        """A read-only serving node still compiles and serves its plans;
+        persistence is best-effort (one warning, no crash)."""
+        import logging
+
+        import repro.core.plan as plan_mod
+        blocker = tmp_path / "blocker"
+        blocker.write_text("")
+        monkeypatch.setenv("KLARAPTOR_CACHE_DIR", str(blocker / "sub"))
+        monkeypatch.setattr(plan_mod, "_plan_write_warned", False)
+        from repro.core import register_driver
+        register_driver(builds["matmul"].driver)
+        with caplog.at_level(logging.WARNING, logger="repro.core.plan"):
+            summary = precompile_plans(
+                {"matmul_b16": ENVELOPES["matmul"]})
+        assert summary["compiled"] == ["matmul_b16"]
+        assert registry.plan("matmul_b16", V5E.name) is not None
+        assert any("plan artifact write failed" in r.message
+                   for r in caplog.records)
+
+    def test_warm_start_summary_counts(self, clean):
+        summary = warm_start_from_cache()
+        assert summary == [] and summary.plans_loaded == []
+        build = self._build_cached()          # registered + cached
+        summary = warm_start_from_cache()
+        assert summary == [] and summary.already_registered == 1
+        registry.clear()
+        summary = warm_start_from_cache(
+            [build.driver.kernel, "missing_kernel"])
+        assert list(summary) == [build.driver.kernel]
+        assert summary.skipped_no_entry == 1
+        assert set(summary.as_dict()) == {
+            "loaded", "plans_loaded", "already_registered",
+            "skipped_no_entry", "skipped_bad"}
+
+    def test_stale_plan_not_loaded_for_new_driver(self, clean):
+        """A persisted plan from an older driver generation is not
+        installed next to the newer driver it does not describe."""
+        build = self._build_cached()
+        plan = compile_plan(build.driver, lattice(ENVELOPES["matmul"]))
+        stale = LaunchPlanTable.from_json(
+            {**plan.to_json(), "source_hash": "deadbeef"})
+        cache = DriverCache()
+        cache.put_plan(PlanEntry(
+            kernel=build.driver.kernel, key="s" * 64, hw_name=V5E.name,
+            plan=stale.to_json(), created_at=1.0))
+        registry.clear()
+        summary = warm_start_from_cache()
+        assert summary == [build.driver.kernel]
+        assert summary.plans_loaded == []
+
+
+# ---------------------------------------------------------------------------
+# Telemetry surface: plan metrics in JSON and Prometheus output
+# ---------------------------------------------------------------------------
+
+class TestPlanMetrics:
+    def test_exporter_reports_plan_counters(self, clean, builds):
+        from repro.telemetry import Telemetry
+        driver = builds["matmul"].driver
+        from repro.core import register_driver
+        register_driver(driver)
+        registry.register_plan(compile_plan(driver,
+                                            lattice(ENVELOPES["matmul"])))
+        tel = Telemetry([matmul_spec()], V5eSimulator(seed=0), cache=False)
+        with tel:
+            choose_or_default(driver.kernel, {"m": 1024, "n": 2048,
+                                              "k": 512}, {"bm": -1})
+        snap = tel.snapshot()
+        assert snap["counters"]["choices_by_source"] == {"plan": 1}
+        assert snap["counters"]["plan_hits"] == 1
+        assert snap["counters"]["choose_many_calls"] >= 1
+        assert snap["counters"]["choose_many_rows"] >= 1
+        prom = tel.prometheus()
+        assert 'klaraptor_choices_total{source="plan"} 1' in prom
+        assert "klaraptor_plan_hits 1" in prom
+        assert "klaraptor_choose_many_calls" in prom
+
+
+# ---------------------------------------------------------------------------
+# Satellites: D-specialization of rational programs, _fit_tile memo
+# ---------------------------------------------------------------------------
+
+class TestSpecialize:
+    def test_expr_folding_matches_eval(self):
+        from repro.core import ceil_div, var
+        e = ceil_div(var("m"), var("bm")) * ceil_div(var("n"), var("bn"))
+        s = e.specialize({"m": 4096, "n": 2048})
+        assert s.free_vars() == {"bm", "bn"}
+        env = {"bm": np.array([8.0, 128.0]), "bn": np.array([128.0, 256.0])}
+        np.testing.assert_array_equal(
+            s.eval(env), e.eval({**env, "m": 4096, "n": 2048}))
+
+    def test_select_folds_and_pieces_shrink(self):
+        from repro.core import RationalProgram, Select, const, var
+        e = Select(var("d") >= const(128), var("p") * 2.0, var("p") * 3.0)
+        prog = RationalProgram("t", ("d", "p"), {"E": e})
+        assert prog.count_pieces() == 2
+        spec = prog.specialize({"d": 256})
+        assert spec.count_pieces() == 1           # decision node folded away
+        assert spec.inputs == ("p",)
+        assert float(spec.eval({"p": 5.0})) == 10.0
+
+    def test_full_binding_gives_constant(self):
+        from repro.core import Const, var
+        e = (var("a") + var("b")) / var("c")
+        s = e.specialize({"a": 6, "b": 2, "c": 4})
+        assert isinstance(s, Const) and s.value == 2.0
+
+    def test_partially_bound_fitted_leaf(self, builds):
+        """Specializing a program whose Fitted leaves mix D and P must pin
+        the D inputs (partial application) so the specialized program is
+        evaluable with only its advertised inputs."""
+        from repro.core import (Fitted, RationalProgram, build_time_program,
+                                matmul_spec, var)
+        fits = {m: f.function for m, f in builds["matmul"].fits.items()}
+        prog = build_time_program(matmul_spec(), fits)
+        D = {"m": 4096.0, "n": 2048.0, "k": 1024.0}
+        sp = prog.specialize(D)
+        assert not (set(sp.inputs) & set(D))
+        P = {"bm": np.array([128.0, 256.0]), "bn": np.array([512.0, 512.0]),
+             "bk": np.array([512.0, 1024.0])}
+        np.testing.assert_allclose(sp.eval(P), prog.eval({**D, **P}))
+        # a partially-applied leaf refuses source emission (codegen never
+        # produces one; silently wrong source would be worse)
+        leaf = Fitted("g", fits["mem_step"], {"bm": 8.0})
+        with pytest.raises(NotImplementedError):
+            leaf.to_source()
+
+
+class TestFitTileMemo:
+    def test_memoized_and_correct(self):
+        from repro.kernels.ops import _fit_tile
+        _fit_tile.cache_clear()
+        raw = _fit_tile.__wrapped__
+        cases = [(4096, 512, 128), (100, 64, 8), (7, 512, 8),
+                 (384, 512, 128), (4096, 512, 128)]
+        for size, tile, align in cases:
+            assert _fit_tile(size, tile, align) == raw(size, tile, align)
+        info = _fit_tile.cache_info()
+        assert info.hits >= 1 and info.misses == len(set(cases))

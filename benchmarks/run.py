@@ -15,6 +15,10 @@ Prints ``name,us_per_call,derived`` CSV lines:
   dispatch -- compiled launch-plan steady-state dispatch latency and
               choose_many batch-compilation speedup (BENCH_dispatch.json);
               prints dispatch/skipped if the demo cannot run here
+  introspect -- spec-extraction fidelity vs the hand-written tier-1 specs
+              plus zero-hand-spec tuning of the auto kernels
+              (BENCH_introspect.json); prints introspect/skipped if the
+              demo cannot run here
 """
 
 from __future__ import annotations
@@ -57,6 +61,14 @@ def main() -> None:
             print(line, flush=True)
     except Exception as e:
         print(f"dispatch/skipped,0,{e!r}", flush=True)
+    # Trailing: introspection fidelity + auto-spec tuning must not mask the
+    # benches above (and vice versa).
+    try:
+        from benchmarks import bench_introspect
+        for line in bench_introspect.main([]):
+            print(line, flush=True)
+    except Exception as e:
+        print(f"introspect/skipped,0,{e!r}", flush=True)
 
 
 if __name__ == "__main__":

@@ -20,13 +20,12 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["CollectiveStats", "collective_bytes", "DTYPE_BYTES"]
+# DTYPE_BYTES is re-exported for backwards compatibility; the canonical
+# table lives in core/device_model.py (shared with the introspection cost
+# walk so dtype widths are defined exactly once).
+from repro.core.device_model import DTYPE_BYTES
 
-DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-}
+__all__ = ["CollectiveStats", "collective_bytes", "DTYPE_BYTES"]
 
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",

@@ -8,8 +8,9 @@ from .cache import (
     default_cache_dir, spec_fingerprint,
 )
 from .device_model import (
-    V5E, V5P, DeviceModel, HardwareParams, KernelTraffic, ProbeBatch,
-    ProbeRecord, RowProbe, TrafficOperand, TrafficTable, V5eSimulator,
+    DTYPE_BYTES, V5E, V5P, DeviceModel, HardwareParams, KernelTraffic,
+    ProbeBatch, ProbeRecord, RowProbe, TrafficOperand, TrafficTable,
+    V5eSimulator, dtype_bytes,
 )
 from .driver import (
     ChoiceEvent, DriverProgram, WarmStartSummary, choose_or_default,
@@ -18,8 +19,9 @@ from .driver import (
 )
 from .fitting import FitResult, fit_auto, fit_polynomial, fit_rational
 from .kernel_spec import (
-    CandidateTable, GridAxis, KernelSpec, Operand, flash_attention_spec,
-    matmul_spec, moe_gmm_spec, polybench_suite, ssd_scan_spec,
+    CandidateTable, GridAxis, KernelSpec, Operand, SpecError,
+    flash_attention_spec, matmul_spec, moe_gmm_spec, polybench_suite,
+    ssd_scan_spec,
 )
 from .occupancy import cuda_occupancy_program, tpu_pipeline_occupancy_program
 from .perf_model import LOW_LEVEL_METRICS, build_time_program
@@ -40,14 +42,14 @@ from .tuner import (
 __all__ = [
     "CacheEntry", "DriverCache", "PlanEntry", "cache_key", "default_cache",
     "default_cache_dir", "spec_fingerprint",
-    "V5E", "V5P", "DeviceModel", "HardwareParams", "KernelTraffic",
-    "ProbeBatch", "ProbeRecord", "RowProbe", "TrafficOperand",
-    "TrafficTable", "V5eSimulator",
+    "DTYPE_BYTES", "V5E", "V5P", "DeviceModel", "HardwareParams",
+    "KernelTraffic", "ProbeBatch", "ProbeRecord", "RowProbe",
+    "TrafficOperand", "TrafficTable", "V5eSimulator", "dtype_bytes",
     "ChoiceEvent", "DriverProgram", "WarmStartSummary", "choose_or_default",
     "get_choice_listener", "get_driver", "register_driver", "registry",
     "set_choice_listener", "warm_start_from_cache",
     "FitResult", "fit_auto", "fit_polynomial", "fit_rational",
-    "CandidateTable", "GridAxis", "KernelSpec", "Operand",
+    "CandidateTable", "GridAxis", "KernelSpec", "Operand", "SpecError",
     "flash_attention_spec",
     "matmul_spec", "moe_gmm_spec", "polybench_suite", "ssd_scan_spec",
     "cuda_occupancy_program", "tpu_pipeline_occupancy_program",

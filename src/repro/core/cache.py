@@ -76,7 +76,7 @@ def spec_fingerprint(spec: KernelSpec) -> dict:
     """JSON-able description of everything about a spec that affects the
     built driver.  Any edit to the spec changes the fingerprint and hence
     the cache key (stale-by-construction)."""
-    return {
+    fp = {
         "name": spec.name,
         "data_params": list(spec.data_params),
         "program_params": list(spec.program_params),
@@ -93,6 +93,13 @@ def spec_fingerprint(spec: KernelSpec) -> dict:
         "probe_hints": {k: list(v)
                         for k, v in sorted(spec.probe_hints.items())},
     }
+    # Introspected specs carry the content identity of the traced kernel:
+    # editing the kernel body changes the fingerprint and hence the cache
+    # key, so stale tuning artifacts are never found.  Folded in only when
+    # set, so hand-written specs keep their existing keys.
+    if getattr(spec, "source_fingerprint", ""):
+        fp["source_fingerprint"] = spec.source_fingerprint
+    return fp
 
 
 def cache_key(spec: KernelSpec, hw: HardwareParams,

@@ -28,8 +28,46 @@ import numpy as np
 __all__ = [
     "HardwareParams", "V5E", "V5P", "ProbeRecord", "ProbeBatch", "RowProbe",
     "DeviceModel", "KernelTraffic", "TrafficTable", "TrafficOperand",
-    "V5eSimulator", "InterpretTimer",
+    "V5eSimulator", "InterpretTimer", "DTYPE_BYTES", "dtype_bytes",
 ]
+
+# Canonical dtype-width table, keyed by HLO short names.  This is the single
+# source of truth for "how many bytes does one element move": the HLO
+# collective parser (analysis/hlo.py) and the introspection cost walk
+# (repro/introspect) both consume it, so a new dtype is added exactly once.
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# numpy/jax dtype names -> HLO short names (for dtype_bytes lookups on
+# dtype objects rather than HLO text).
+_NP_TO_HLO = {
+    "bool": "pred", "int8": "s8", "uint8": "u8", "int16": "s16",
+    "uint16": "u16", "bfloat16": "bf16", "float16": "f16", "int32": "s32",
+    "uint32": "u32", "float32": "f32", "int64": "s64", "uint64": "u64",
+    "float64": "f64", "complex64": "c64", "complex128": "c128",
+    "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2",
+}
+
+
+def dtype_bytes(dt) -> int:
+    """Bytes per element for an HLO short name or a numpy/jax dtype.
+
+    Accepts "bf16"-style HLO names, dtype objects, and dtype names
+    ("bfloat16"); unknown dtype objects fall back to their itemsize.
+    """
+    if isinstance(dt, str) and dt in DTYPE_BYTES:
+        return DTYPE_BYTES[dt]
+    name = getattr(dt, "name", None) or str(dt)
+    hlo = _NP_TO_HLO.get(name)
+    if hlo is not None:
+        return DTYPE_BYTES[hlo]
+    try:
+        return int(np.dtype(dt).itemsize)
+    except TypeError:
+        raise KeyError(f"unknown dtype {dt!r}")
 
 
 @dataclass(frozen=True)

@@ -16,6 +16,7 @@ and here.
 
 from __future__ import annotations
 
+import functools
 import logging
 import threading
 from dataclasses import dataclass, field
@@ -30,7 +31,27 @@ from .plan import LaunchPlanTable
 __all__ = ["ChoiceEvent", "DriverProgram", "WarmStartSummary", "registry",
            "register_driver", "get_driver", "choose_or_default",
            "set_choice_listener", "get_choice_listener",
-           "warm_start_from_cache"]
+           "warm_start_from_cache", "fit_tile"]
+
+
+@functools.lru_cache(maxsize=4096)
+def fit_tile(size: int, tile: int, align: int) -> int:
+    """Largest divisor of ``size`` that is <= tile and a multiple of
+    ``align`` -- keeps tuned tiles valid for shapes the tuner never saw.
+
+    The canonical tile-snapping helper shared by every dispatch layer
+    (``kernels/ops.py`` for hand-specced ops, ``introspect.AutoKernel``
+    with its derived granularities).  Memoized: the O(tile/align)
+    scan-down loop would otherwise re-run on every trace-time dispatch,
+    and (size, tile, align) triples recur heavily under steady traffic.
+    """
+    tile = min(tile, size)
+    t = (tile // align) * align
+    while t > align and size % t:
+        t -= align
+    if t >= align and size % t == 0:
+        return t
+    return size  # degenerate: single block
 
 logger = logging.getLogger(__name__)
 

@@ -25,6 +25,8 @@ here -- they come from probing the device oracle.
 
 from __future__ import annotations
 
+import ast
+import functools
 import math
 from dataclasses import dataclass, field
 from typing import Iterator, Mapping, Sequence
@@ -36,12 +38,57 @@ from .device_model import (HardwareParams, KernelTraffic, TrafficOperand,
 from .rational_program import Ceil, Const, Expr, Floor, Max, Min, ceil_div, var
 
 __all__ = [
-    "Operand", "GridAxis", "KernelSpec", "CandidateTable",
+    "Operand", "GridAxis", "KernelSpec", "CandidateTable", "SpecError",
     "matmul_spec", "flash_attention_spec", "moe_gmm_spec", "ssd_scan_spec",
     "POLYBENCH_SUITE", "polybench_suite",
 ]
 
 Dims = Mapping[str, int]
+
+
+class SpecError(ValueError):
+    """A kernel-spec constraint string is malformed or references a symbol
+    that is neither a data parameter, a program parameter, nor one of the
+    evaluation built-ins (``vmem``, ``math``, ``np``).
+
+    Constraint strings are user input (the paper's Section V-A configuration
+    files); a typo'd symbol used to surface as a bare ``NameError`` swallowed
+    into an all-infeasible mask.  Now it is diagnosed by name, eagerly, the
+    first time the constraint is evaluated.
+    """
+
+
+@functools.lru_cache(maxsize=4096)
+def _constraint_names(constraint: str) -> frozenset[str]:
+    """Bare symbols referenced by a constraint expression (cached: the AST
+    parse would otherwise re-run for every feasible_mask call of every
+    collect/search loop).  Only ``Name`` loads count, so ``math.ceil``
+    checks ``math``, not ``ceil``.  Raises SpecError on syntax errors."""
+    try:
+        tree = ast.parse(constraint, mode="eval")
+    except SyntaxError as e:
+        raise SpecError(
+            f"constraint {constraint!r} is not a valid Python expression: "
+            f"{e.msg}") from e
+    return frozenset(n.id for n in ast.walk(tree)
+                     if isinstance(n, ast.Name))
+
+
+def _check_constraint_symbols(constraint: str, known: set[str],
+                              spec_name: str) -> None:
+    """Raise SpecError naming the offending symbol(s) of a constraint."""
+    try:
+        names = _constraint_names(constraint)
+    except SpecError as e:
+        raise SpecError(f"spec {spec_name!r}: {e}") from None
+    unknown = sorted(names - known)
+    if unknown:
+        raise SpecError(
+            f"constraint {constraint!r} of spec {spec_name!r} references "
+            f"unknown symbol(s) {', '.join(map(repr, unknown))}; known "
+            f"symbols are the data/program parameters "
+            f"{sorted(known - {'vmem', 'math', 'np'})} plus 'vmem', "
+            f"'math' and 'np'")
 
 
 def _pad(x, m):
@@ -177,6 +224,11 @@ class KernelSpec:
     # collect.default_probe_data -- count-like params (experts, batch*heads)
     # declare small fixed values here so new kernels need no edits to core
     probe_hints: dict[str, tuple[int, ...]] = field(default_factory=dict)
+    # Content identity of the traced kernel an introspected spec was derived
+    # from (repro/introspect): folded into the driver-artifact cache key, so
+    # editing the kernel body invalidates its tuning artifacts by
+    # construction.  Empty for hand-written specs.
+    source_fingerprint: str = ""
 
     # -- derived, analytic ----------------------------------------------------
     def grid_extents(self, D: Dims, P: Dims) -> tuple[int, ...]:
@@ -353,15 +405,21 @@ class KernelSpec:
         The user-written Python-syntax constraint strings (Section V-A) are
         evaluated once with ndarray columns bound to the program parameters;
         a constraint that resists array evaluation falls back to per-row
-        scalar evaluation for just that constraint.
+        scalar evaluation for just that constraint.  Evaluation happens in a
+        restricted namespace (no builtins; only the spec's parameters plus
+        ``vmem``, ``math`` and ``np``), and a constraint referencing any
+        other symbol raises :class:`SpecError` naming it instead of
+        silently masking every configuration infeasible.
         """
         n = len(table)
         mask = np.ones(n, dtype=bool)
         env: dict[str, object] = {k: int(v) for k, v in D.items()}
         env.update(table.columns)
         env["vmem"] = hw.vmem_bytes
+        known = set(env) | {"math", "np"}
         globs = {"__builtins__": {}, "math": math, "np": np}
         for c in self.constraints:
+            _check_constraint_symbols(c, known, self.name)
             try:
                 res = eval(c, globs, dict(env))
                 mask &= np.broadcast_to(np.asarray(res, dtype=bool), (n,))
@@ -470,8 +528,10 @@ def flash_attention_spec(head_dim: int = 128, causal: bool = True,
             Operand("v", ("bkv", head_dim), ("b", "ikv"), dtype_bytes),
             Operand("out", ("bq", head_dim), ("b", "iq"), dtype_bytes,
                     is_output=True),
+            # VMEM scratch, in kernel declaration order (no HBM traffic):
+            Operand("rowmax", ("bq", 128), (), 4),         # running max m
+            Operand("rowsum", ("bq", 128), (), 4),         # running sum l
             Operand("acc", ("bq", head_dim), (), 4),       # o accumulator
-            Operand("rowstats", ("bq", 128), (), 4),       # m, l running stats
         ),
         flops_per_point=f,
         constraints=("bq <= sq", "bkv <= skv",
@@ -539,13 +599,19 @@ def ssd_scan_spec(d_head: int = 64, d_state: int = 128,
         program_params=("chunk",),
         grid=(GridAxis("b", "bh", None), GridAxis("c", "s", "chunk")),
         operands=(
+            # Kernel operand order (matches ssd_scan_pallas): x, dt, B, C, A,
+            # out, then the inter-chunk state scratch.  dt is broadcast to a
+            # lane-aligned (chunk, 128) plane before the pallas_call; the
+            # per-head decay rate A is a (1, 128) plane re-fetched per batch
+            # row (index map depends on the b axis only).
             Operand("x", ("chunk", d_head), ("b", "c"), dtype_bytes),
-            Operand("bc", ("chunk", 2 * d_state), ("b", "c"), dtype_bytes),
-            Operand("dt", ("chunk", 8), ("b", "c"), 4),
-            Operand("state", (d_state, d_head), (), 4),
+            Operand("dt", ("chunk", 128), ("b", "c"), 4),
+            Operand("b_proj", ("chunk", d_state), ("b", "c"), dtype_bytes),
+            Operand("c_proj", ("chunk", d_state), ("b", "c"), dtype_bytes),
+            Operand("decay", (1, 128), ("b",), 4),
             Operand("out", ("chunk", d_head), ("b", "c"), dtype_bytes,
                     is_output=True),
-            Operand("acc", ("chunk", d_head), (), 4),
+            Operand("state", (d_state, d_head), (), 4),
         ),
         # dominant intra-chunk matmul term: 2 * chunk * d_head per point is
         # chunk-dependent; expressed by treating "chunkflops" as a data param

@@ -28,7 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.driver import choose_or_default
+from repro.core.driver import choose_or_default, fit_tile as _fit_tile
 
 from . import ref
 from .flash_attention import flash_attention_pallas
@@ -36,7 +36,8 @@ from .matmul import matmul_pallas
 from .moe_gmm import moe_gmm_pallas
 from .ssd_scan import ssd_scan_pallas
 
-__all__ = ["matmul", "flash_attention", "moe_gmm", "ssd_scan"]
+__all__ = ["matmul", "flash_attention", "moe_gmm", "ssd_scan",
+           "layernorm", "blocked_colsum"]
 
 # Static heuristic defaults (the "multiple of 32"-style baseline the paper
 # contrasts with -- what a programmer would hard-code).
@@ -44,23 +45,6 @@ MATMUL_DEFAULT = {"bm": 128, "bn": 512, "bk": 512}
 FLASH_DEFAULT = {"bq": 512, "bkv": 512}
 GMM_DEFAULT = {"bg": 128, "bn": 512, "bk": 512}
 SSD_DEFAULT = {"chunk": 256}
-
-
-@functools.lru_cache(maxsize=4096)
-def _fit_tile(size: int, tile: int, align: int) -> int:
-    """Largest divisor of ``size`` that is <= tile and a multiple of
-    ``align`` -- keeps tuned tiles valid for shapes the tuner never saw.
-
-    Memoized: the O(tile/align) scan-down loop would otherwise re-run on
-    every trace-time dispatch of every op, and (size, tile, align) triples
-    recur heavily under steady traffic."""
-    tile = min(tile, size)
-    t = (tile // align) * align
-    while t > align and size % t:
-        t -= align
-    if t >= align and size % t == 0:
-        return t
-    return size  # degenerate: single block
 
 
 def matmul(x: jax.Array, y: jax.Array, *, use_pallas: bool = False,
@@ -142,3 +126,60 @@ def ssd_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
         SSD_DEFAULT)
     chunk = _fit_tile(s, cfg["chunk"], 128) if s >= 128 else s
     return ssd_scan_pallas(x, dt, B, C, A, chunk=chunk, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Auto-specced ops: no hand-written KernelSpec anywhere.  On first dispatch
+# the Pallas kernel is introspected (repro.introspect traces its IR and
+# derives the spec, including the tile-alignment granularities the _fit_tile
+# calls above hard-code by hand), then launch parameters flow through the
+# same choose_or_default chain: override > plan table > driver > default.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _layernorm_auto(c: int, dtype_bytes: int):
+    from repro.introspect import auto_register
+
+    from .layernorm import layernorm_grid_spec, layernorm_pallas
+    return auto_register(layernorm_pallas,
+                         layernorm_grid_spec(c, dtype_bytes))
+
+
+@functools.lru_cache(maxsize=4)
+def _colsum_auto(dtype_bytes: int):
+    from repro.introspect import auto_register
+
+    from .reduce import colsum_grid_spec, colsum_pallas
+    return auto_register(colsum_pallas, colsum_grid_spec(dtype_bytes))
+
+
+def layernorm(x: jax.Array, res: jax.Array, gamma: jax.Array,
+              beta: jax.Array, *, eps: float = 1e-6,
+              use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+    """Fused layernorm + residual with an introspection-tuned row tile."""
+    if not use_pallas:
+        return ref.layernorm_ref(x, res, gamma, beta, eps=eps)
+    from .layernorm import layernorm_pallas
+
+    r, c = x.shape
+    ak = _layernorm_auto(c, 2 if x.dtype == jnp.bfloat16 else 4)
+    cfg = ak.fit_config(choose_or_default(ak.name, {"r": r}, ak.defaults),
+                        {"r": r})
+    return layernorm_pallas(x, res, gamma, beta, br=cfg["br"], eps=eps,
+                            interpret=interpret)
+
+
+def blocked_colsum(x: jax.Array, *, use_pallas: bool = False,
+                   interpret: bool = True) -> jax.Array:
+    """Column sums of (r, c) with introspection-tuned (br, bc) tiles."""
+    if not use_pallas:
+        return ref.colsum_ref(x)
+    from .reduce import colsum_pallas
+
+    r, c = x.shape
+    ak = _colsum_auto(2 if x.dtype == jnp.bfloat16 else 4)
+    cfg = ak.fit_config(
+        choose_or_default(ak.name, {"r": r, "c": c}, ak.defaults),
+        {"r": r, "c": c})
+    return colsum_pallas(x, br=cfg["br"], bc=cfg["bc"],
+                         interpret=interpret)[0]

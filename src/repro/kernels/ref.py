@@ -11,7 +11,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["matmul_ref", "flash_attention_ref", "moe_gmm_ref", "ssd_scan_ref"]
+__all__ = ["matmul_ref", "flash_attention_ref", "moe_gmm_ref",
+           "ssd_scan_ref", "layernorm_ref", "colsum_ref"]
+
+
+def layernorm_ref(x: jax.Array, res: jax.Array, gamma: jax.Array,
+                  beta: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Fused layernorm + residual over the last axis (float32 math)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    xc = xf - mu
+    var = (xc * xc).mean(axis=-1, keepdims=True)
+    y = xc * jax.lax.rsqrt(var + eps)
+    y = y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return (y + res.astype(jnp.float32)).astype(x.dtype)
+
+
+def colsum_ref(x: jax.Array) -> jax.Array:
+    """Column sums of a (r, c) array, in float32."""
+    return x.astype(jnp.float32).sum(axis=0)
 
 
 def matmul_ref(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:

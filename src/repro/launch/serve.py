@@ -28,7 +28,7 @@ from repro.models import Model, init_params
 from repro.serving import Request, ServingEngine
 
 __all__ = ["main", "build_engine", "build_telemetry",
-           "default_plan_envelope"]
+           "default_plan_envelope", "build_auto_kernels"]
 
 
 def default_plan_envelope(batch: int, max_seq: int) -> dict:
@@ -52,27 +52,52 @@ def default_plan_envelope(batch: int, max_seq: int) -> dict:
     }
 
 
-def build_telemetry(seed: int = 0):
-    """Default serving telemetry: tier-1 kernel specs over the v5e oracle."""
+def build_auto_kernels(d_model: int = 1024, tune_device=None):
+    """Introspect the auto-specced kernels (layernorm fusion + blocked
+    column reduction) -- zero hand-written spec code.
+
+    With ``tune_device`` (a DeviceModel) each kernel that has no registered
+    or cached driver gets one built immediately (collect -> fit -> codegen,
+    written through the artifact cache under the traced kernel's content
+    hash); otherwise tuning is left to the cache warm start / lazy search.
+    """
+    from repro.introspect import auto_register
+    from repro.kernels.layernorm import layernorm_grid_spec, layernorm_pallas
+    from repro.kernels.reduce import colsum_grid_spec, colsum_pallas
+
+    kernels = [
+        auto_register(layernorm_pallas, layernorm_grid_spec(d_model)),
+        auto_register(colsum_pallas, colsum_grid_spec()),
+    ]
+    if tune_device is not None:
+        for ak in kernels:
+            ak.ensure_driver(tune_device, repeats=2, max_configs_per_size=8)
+    return kernels
+
+
+def build_telemetry(seed: int = 0, auto_kernels=()):
+    """Default serving telemetry: tier-1 kernel specs over the v5e oracle
+    (plus any introspected auto-kernel specs)."""
     from repro.core import (V5eSimulator, flash_attention_spec, matmul_spec,
                             moe_gmm_spec, ssd_scan_spec)
     from repro.telemetry import Telemetry
 
     specs = [matmul_spec(), flash_attention_spec(), moe_gmm_spec(),
-             ssd_scan_spec()]
+             ssd_scan_spec()] + [ak.spec for ak in auto_kernels]
     return Telemetry(specs, V5eSimulator(seed=seed), seed=seed)
 
 
 def build_engine(cfg, batch: int, max_seq: int, mesh=None, params=None,
                  seed: int = 0, telemetry=None,
-                 plan_envelope=None) -> ServingEngine:
+                 plan_envelope=None, auto_kernels=None) -> ServingEngine:
     model = Model(cfg)
     sharder = Sharder(mesh=mesh, rules=decode_rules())
     if params is None:
         params = init_params(model.specs(), jax.random.PRNGKey(seed))
     return ServingEngine(model, params, sharder, batch=batch,
                          max_seq=max_seq, telemetry=telemetry,
-                         plan_envelope=plan_envelope)
+                         plan_envelope=plan_envelope,
+                         auto_kernels=auto_kernels)
 
 
 def main() -> None:
@@ -92,14 +117,31 @@ def main() -> None:
     ap.add_argument("--plans", action="store_true",
                     help="precompile launch plans for the default decode "
                          "traffic envelope at warm start (O(1) dispatch)")
+    ap.add_argument("--auto-kernels", action="store_true",
+                    help="introspect + tune the auto-specced kernels "
+                         "(layernorm fusion, blocked column reduction) and "
+                         "serve them through the engine: zero hand-written "
+                         "spec code")
     args = ap.parse_args()
 
-    telemetry = build_telemetry() if args.telemetry else None
     cfg = get_config(args.arch, smoke=args.smoke)
+    auto = []
+    if args.auto_kernels:
+        from repro.core import V5eSimulator
+        auto = build_auto_kernels(d_model=cfg.d_model,
+                                  tune_device=V5eSimulator())
+        for ak in auto:
+            print(f"auto kernel {ak.name}: "
+                  f"{len(ak.spec.operands)} operands, "
+                  f"grid rank {len(ak.spec.grid)}, "
+                  f"constraints {list(ak.spec.constraints)}, "
+                  f"kernel hash {ak.spec.source_fingerprint}")
+    telemetry = (build_telemetry(auto_kernels=auto)
+                 if args.telemetry else None)
     envelope = (default_plan_envelope(args.batch, args.max_seq)
                 if args.plans else None)
     engine = build_engine(cfg, args.batch, args.max_seq, telemetry=telemetry,
-                          plan_envelope=envelope)
+                          plan_envelope=envelope, auto_kernels=auto)
     ws = engine.warm_started
     print(f"warm start: {len(ws)} driver(s) loaded {list(ws)}, "
           f"{len(ws.plans_loaded)} plan(s), "

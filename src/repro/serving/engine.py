@@ -28,6 +28,13 @@ into runtime observability: every launch decision is counted, a sampled
 subset is shadow-probed against the device oracle, and drivers whose
 predictions drift from observed reality are refit and hot-swapped under a
 hard probe budget.
+
+Passing ``auto_kernels=`` (``repro.introspect.AutoKernel`` instances)
+declares introspected kernels this engine serves: their cached drivers are
+covered by the same warm start (cache keys include the traced kernel's
+content hash, so an edited kernel body never warm-starts stale tuning) and
+their derived traffic lattices are merged into the plan-precompilation
+envelope.
 """
 
 from __future__ import annotations
@@ -58,7 +65,7 @@ class Request:
 class ServingEngine:
     def __init__(self, model, params, sharder, batch: int, max_seq: int,
                  eos_id: int = 1, seed: int = 0, warm_start: bool = True,
-                 telemetry=None, plan_envelope=None):
+                 telemetry=None, plan_envelope=None, auto_kernels=None):
         self.model = model
         self.params = params
         self.sharder = sharder
@@ -84,15 +91,25 @@ class ServingEngine:
             warm_start_from_cache() if warm_start else WarmStartSummary()
         if telemetry is not None:
             telemetry.note_warm_start(self.warm_started)
+        # Introspected kernels served by this engine (repro.introspect
+        # AutoKernel instances): their tuned drivers arrive through the same
+        # cache warm start as everything else (keyed by spec name + the
+        # traced kernel's content hash), and their derived traffic lattices
+        # join the plan-precompilation envelope below so auto kernels get
+        # O(1) plan-table dispatch with zero hand-written spec code.
+        self.auto_kernels = list(auto_kernels or [])
         # Precompile launch plans over the declared traffic envelope:
         # kernel name -> {data param: candidate values}.  One choose_many
         # pass per kernel; kernels with no driver are skipped (lazy fill
         # covers them once tuning appears).
         self.plan_summary: dict = {"compiled": [], "loaded": [],
                                    "skipped": [], "entries": 0}
-        if plan_envelope:
+        envelope = dict(plan_envelope or {})
+        for ak in self.auto_kernels:
+            envelope.setdefault(ak.name, ak.plan_envelope())
+        if envelope:
             from repro.core.plan import precompile_plans
-            self.plan_summary = precompile_plans(plan_envelope)
+            self.plan_summary = precompile_plans(envelope)
 
         self.cache = model.init_cache(batch, max_seq)
         self.slot_req: list[Request | None] = [None] * batch

@@ -12,9 +12,11 @@ Prints ``name,us_per_call,derived`` CSV lines:
   telemetry -- closed-loop drift-detection/refit recovery
                (BENCH_telemetry.json); prints telemetry/skipped if the
                demo cannot run here
-  dispatch -- compiled launch-plan steady-state dispatch latency and
-              choose_many batch-compilation speedup (BENCH_dispatch.json);
-              prints dispatch/skipped if the demo cannot run here
+  dispatch -- the dispatch ladder end to end: decision-memo and plan-table
+              steady-state latency, choose_many batch-compilation speedup,
+              and the step-plan serving loop vs per-call dispatch
+              (BENCH_dispatch.json, schema v2); prints dispatch/skipped if
+              the demo cannot run here
   introspect -- spec-extraction fidelity vs the hand-written tier-1 specs
               plus zero-hand-spec tuning of the auto kernels
               (BENCH_introspect.json); prints introspect/skipped if the

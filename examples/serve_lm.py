@@ -39,6 +39,14 @@ def main() -> None:
     print(f"\n{len(finished)} requests, {toks} tokens in {dt:.1f}s through "
           f"{args.batch} continuous-batching slots "
           f"({toks / dt:.1f} tok/s on CPU)")
+    if engine._step_plan is not None:
+        sp = engine._step_plan.describe()
+        print(f"step plan: {sp['entries']} kernel configs frozen at "
+              f"registry generation {sp['generation']} "
+              f"(sources: {sp['sources']}) -- traced decode steps dispatch "
+              f"from the frozen table, zero registry round-trips")
+    from repro.core.driver import registry
+    print(f"decision-memo hits this run: {registry.memo_hits()}")
 
 
 if __name__ == "__main__":

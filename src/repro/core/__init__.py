@@ -12,10 +12,11 @@ from .device_model import (
     ProbeBatch, ProbeRecord, RowProbe, TrafficOperand, TrafficTable,
     V5eSimulator, dtype_bytes,
 )
+from .device_plan import DevicePlanTable, pack_shape32
 from .driver import (
-    ChoiceEvent, DriverProgram, WarmStartSummary, choose_or_default,
-    get_choice_listener, get_driver, register_driver, registry,
-    set_choice_listener, warm_start_from_cache,
+    ChoiceEvent, DriverProgram, WarmStartSummary, choose_or_default, dkey,
+    get_choice_listener, get_driver, memo_key, register_driver, registry,
+    set_choice_listener, set_decision_memo, warm_start_from_cache,
 )
 from .fitting import FitResult, fit_auto, fit_polynomial, fit_rational
 from .kernel_spec import (
@@ -31,6 +32,10 @@ from .plan import (
 )
 from .polynomial import Polynomial, design_matrix, monomial_exponents
 from .rational import RationalFunction
+from .step_plan import (
+    KernelRequest, StepPlan, active_step_plan, build_step_plan,
+    use_step_plan,
+)
 from .rational_program import (
     BinOp, Ceil, Const, Expr, Fitted, Floor, Max, Min, RationalProgram,
     Select, Var, ceil_div, const, floor_div, specialize_expr, var,
@@ -46,8 +51,13 @@ __all__ = [
     "KernelTraffic", "ProbeBatch", "ProbeRecord", "RowProbe",
     "TrafficOperand", "TrafficTable", "V5eSimulator", "dtype_bytes",
     "ChoiceEvent", "DriverProgram", "WarmStartSummary", "choose_or_default",
-    "get_choice_listener", "get_driver", "register_driver", "registry",
-    "set_choice_listener", "warm_start_from_cache",
+    "dkey", "get_choice_listener", "get_driver", "memo_key",
+    "register_driver",
+    "registry", "set_choice_listener", "set_decision_memo",
+    "warm_start_from_cache",
+    "DevicePlanTable", "pack_shape32",
+    "KernelRequest", "StepPlan", "active_step_plan", "build_step_plan",
+    "use_step_plan",
     "FitResult", "fit_auto", "fit_polynomial", "fit_rational",
     "CandidateTable", "GridAxis", "KernelSpec", "Operand", "SpecError",
     "flash_attention_spec",

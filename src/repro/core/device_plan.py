@@ -1,0 +1,227 @@
+"""Device-resident launch plans: the in-graph form of a compiled plan.
+
+``core/plan.py`` freezes a driver's choices into a host-side
+``LaunchPlanTable`` -- an O(1) probe, but still a *Python* probe, one host
+round-trip per launch decision.  ROADMAP open item 2 (and KLARAPTOR's own
+framing of the decision as one table-driven IO per launch, paper Section
+V-C) wants the decision inside the compiled graph, so a serving step can
+resolve its configs with no Python in the loop at all.
+
+``DevicePlanTable`` is that lowering: the frozen table's slots become jnp
+arrays (hash column, raw-dimension matrix, config-row matrix, occupancy
+mask) and ``lookup`` is a pure jax function -- hash the query dims with a
+murmur3-finalizer chain, then an *unrolled* open-addressing probe of
+``max_probe`` gather steps (the longest displacement chain the build
+produced; with load factor <= 1/2 this is a handful).  There is no early
+exit in the graph -- every probe step is a masked gather -- so the lookup
+is trace-once, shape-stable, and fuses into whatever step function calls
+it.
+
+Why not reuse the host table's splitmix64 keys: without ``jax_enable_x64``
+jnp silently computes in 32 bits, so a 64-bit hash chain would *diverge*
+between host build and device probe.  The device table therefore hashes in
+uint32 (murmur3 fmix32 chain, identical arithmetic on both sides) and --
+like the host table -- verifies the raw dimensions on every probe step, so
+a 32-bit hash collision costs one masked compare, never a wrong config.
+
+The device table is content-identical to its source: ``lookup_dims``
+(host-convenience wrapper) returns bit-identical configs to
+``LaunchPlanTable.lookup`` for every shape, hit or miss; tests enforce
+this on all tier-1 kernels.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Mapping, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .plan import LaunchPlanTable
+
+__all__ = ["DevicePlanTable", "pack_shape32"]
+
+Dims = Mapping[str, int]
+
+_M32 = 0xFFFFFFFF
+_SEED32 = 0x9E3779B9
+
+
+def _fmix32(x: int) -> int:
+    """murmur3 32-bit finalizer (host side, plain-int arithmetic)."""
+    x &= _M32
+    x ^= x >> 16
+    x = (x * 0x85EBCA6B) & _M32
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & _M32
+    x ^= x >> 16
+    return x
+
+
+def pack_shape32(values: Sequence[int]) -> int:
+    """Pack a shape tuple into one uint32 key (fmix32 chain).
+
+    The 32-bit sibling of ``plan.pack_shape``: same chain structure, but
+    every step is exact uint32 arithmetic so the jnp lowering computes the
+    identical value without x64 mode.  Collisions are more likely than in
+    64 bits and equally harmless -- the table verifies raw dimensions on
+    every probe.
+    """
+    h = _SEED32
+    for v in values:
+        h = _fmix32(h ^ _fmix32(int(v) & _M32))
+    return h
+
+
+def _fmix32_jnp(x: jnp.ndarray) -> jnp.ndarray:
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _pack_shape32_jnp(keys: jnp.ndarray, n_data: int) -> jnp.ndarray:
+    """uint32 shape hash inside the graph (unrolled over the static number
+    of data params; mirrors ``pack_shape32`` step for step)."""
+    h = jnp.uint32(_SEED32)
+    for i in range(n_data):
+        h = _fmix32_jnp(h ^ _fmix32_jnp(keys[i].astype(jnp.uint32)))
+    return h
+
+
+@partial(jax.jit, static_argnames=("cap", "max_probe", "n_data"))
+def _lookup_jit(hashes: jnp.ndarray, dims: jnp.ndarray, rows: jnp.ndarray,
+                occupied: jnp.ndarray, keys: jnp.ndarray,
+                *, cap: int, max_probe: int, n_data: int):
+    """One in-graph table probe: (config_row int32 (n_program,), found bool).
+
+    ``max_probe`` masked gather steps, no data-dependent control flow: a
+    probe step past the match (or past the end of a chain) contributes
+    nothing through its mask.  A missing key returns ``found=False`` and a
+    row of -1s.
+    """
+    h = _pack_shape32_jnp(keys, n_data)
+    slot0 = (h & jnp.uint32(cap - 1)).astype(jnp.int32)
+    found = jnp.zeros((), dtype=bool)
+    row = jnp.full((rows.shape[1],), -1, dtype=jnp.int32)
+    for i in range(max_probe):
+        slot = (slot0 + i) & (cap - 1)
+        hit = (occupied[slot]
+               & (hashes[slot] == h)
+               & jnp.all(dims[slot] == keys)
+               & ~found)
+        row = jnp.where(hit, rows[slot], row)
+        found = found | hit
+    return row, found
+
+
+@dataclass
+class DevicePlanTable:
+    """jnp-array lowering of one frozen ``LaunchPlanTable``.
+
+    Arrays (all preallocated, never mutated):
+
+      * ``hashes``   -- (capacity,) uint32 packed shape keys,
+      * ``occupied`` -- (capacity,) bool slot-in-use mask (any uint32 is a
+                        valid hash, so emptiness needs its own column),
+      * ``dims``     -- (capacity, n_data_params) int32 raw shape values,
+      * ``rows``     -- (capacity, n_program_params) int32 config rows.
+
+    ``max_probe`` is the longest insertion displacement chain + 1: a
+    present key is always found within ``max_probe`` steps of its home
+    slot, so the unrolled graph probe needs exactly that many gathers.
+    """
+
+    kernel: str
+    hw_name: str
+    data_params: tuple[str, ...]
+    program_params: tuple[str, ...]
+    tuning_version: int
+    capacity: int
+    max_probe: int
+    hashes: jnp.ndarray = field(repr=False)
+    occupied: jnp.ndarray = field(repr=False)
+    dims: jnp.ndarray = field(repr=False)
+    rows: jnp.ndarray = field(repr=False)
+    n_entries: int = 0
+    source_hash: str = ""
+
+    @classmethod
+    def from_table(cls, table: LaunchPlanTable) -> "DevicePlanTable":
+        """Lower a frozen host table; re-keys every entry under the 32-bit
+        hash (capacities and probe chains differ from the host table's, the
+        *content* -- shape -> config -- is identical by construction)."""
+        entries = table.entries()
+        n = len(entries)
+        cap = 1
+        while cap < max(2 * n, 2):
+            cap *= 2
+        hashes = np.zeros(cap, dtype=np.uint32)
+        occupied = np.zeros(cap, dtype=bool)
+        dims = np.zeros((cap, len(table.data_params)), dtype=np.int32)
+        rows = np.zeros((cap, len(table.program_params)), dtype=np.int32)
+        max_probe = 0
+        for shape, cfg in entries:
+            key = tuple(int(shape[d]) for d in table.data_params)
+            h = pack_shape32(key)
+            slot = h & (cap - 1)
+            steps = 1
+            while occupied[slot]:
+                # Host-table entries are unique shapes; no duplicate check.
+                slot = (slot + 1) & (cap - 1)
+                steps += 1
+            hashes[slot] = h
+            occupied[slot] = True
+            dims[slot] = key
+            rows[slot] = [int(cfg[p]) for p in table.program_params]
+            max_probe = max(max_probe, steps)
+        return cls(
+            kernel=table.kernel, hw_name=table.hw_name,
+            data_params=table.data_params,
+            program_params=table.program_params,
+            tuning_version=table.tuning_version,
+            capacity=cap, max_probe=max_probe,
+            hashes=jnp.asarray(hashes), occupied=jnp.asarray(occupied),
+            dims=jnp.asarray(dims), rows=jnp.asarray(rows),
+            n_entries=n, source_hash=table.source_hash,
+        )
+
+    # -- the in-graph hot path ------------------------------------------------
+    def lookup(self, keys) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Jit-traceable probe: ``keys`` is the shape tuple in
+        ``data_params`` order (array-like, int32).  Returns
+        ``(config_row, found)`` -- an int32 (n_program_params,) vector and
+        a bool scalar; callable from inside a jitted step function, or
+        directly (each distinct table geometry traces once)."""
+        keys = jnp.asarray(keys, dtype=jnp.int32)
+        if self.max_probe == 0:        # empty table: nothing can be found
+            return (jnp.full((len(self.program_params),), -1,
+                             dtype=jnp.int32),
+                    jnp.zeros((), dtype=bool))
+        return _lookup_jit(self.hashes, self.dims, self.rows, self.occupied,
+                           keys, cap=self.capacity, max_probe=self.max_probe,
+                           n_data=len(self.data_params))
+
+    # -- host conveniences ----------------------------------------------------
+    def lookup_dims(self, D: Dims) -> dict[str, int] | None:
+        """Host wrapper with ``LaunchPlanTable.lookup`` semantics (extra
+        keys ignored, missing data param -> None) -- the bit-identity
+        surface the tests compare against the source table."""
+        try:
+            keys = tuple(int(D[d]) for d in self.data_params)
+        except (KeyError, TypeError, ValueError):
+            return None
+        row, found = self.lookup(keys)
+        if not bool(found):
+            return None
+        row = np.asarray(row)
+        return {p: int(row[i]) for i, p in enumerate(self.program_params)}
+
+    def __len__(self) -> int:
+        return self.n_entries

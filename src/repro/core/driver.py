@@ -31,6 +31,7 @@ from .plan import LaunchPlanTable
 __all__ = ["ChoiceEvent", "DriverProgram", "WarmStartSummary", "registry",
            "register_driver", "get_driver", "choose_or_default",
            "set_choice_listener", "get_choice_listener",
+           "set_decision_memo", "dkey",
            "warm_start_from_cache", "fit_tile"]
 
 
@@ -58,17 +59,38 @@ logger = logging.getLogger(__name__)
 Dims = Mapping[str, int]
 
 
+def dkey(D: Dims) -> tuple:
+    """Canonical hashable form of a data-parameter dict (sorted item
+    tuple) -- the shape key used by step plans and the registry's
+    per-shape tables."""
+    return tuple(sorted(D.items()))
+
+
+def memo_key(kernel: str, hw_name: str, D: Dims) -> tuple:
+    """The decision memo's key form: D in *insertion* order, not sorted
+    (``choose_or_default``'s fast path can't afford the sort; see the
+    comment there).  Exposed so tests and tools can probe memo entries
+    without duplicating the key layout."""
+    return (kernel, hw_name, tuple(D.items()))
+
+
 @dataclass(frozen=True)
 class ChoiceEvent:
     """One launch-parameter decision, as seen by the telemetry listener.
 
     ``source`` names the path that produced the config: ``"driver"`` (the
     rational program chose), ``"override"`` (a telemetry-pinned per-shape
-    config), ``"search"``/``"search_memo"`` (the online-search escalation),
-    or ``"default"`` (fell back to the static heuristic).  ``predicted_s``
+    config), ``"plan"`` (compiled launch-plan probe),
+    ``"search"``/``"search_memo"`` (the online-search escalation), or
+    ``"default"`` (fell back to the static heuristic).  ``predicted_s``
     is the driver's rational-program time estimate for the returned config
     -- the prediction that runtime observability checks against observed
     launches -- and is only computed when a listener is installed.
+
+    ``n_coalesced`` batches steady-state traffic: decision-memo hits past
+    the per-key full-fidelity window are *coalesced* into one sampled
+    event carrying how many launches it stands for, so the listener still
+    sees traffic volume without the hot path paying one event per launch.
     """
 
     kernel: str
@@ -77,6 +99,7 @@ class ChoiceEvent:
     source: str
     predicted_s: float | None
     hw_name: str
+    n_coalesced: int = 1
 
 
 # Process-wide choice listener (repro.telemetry installs itself here).  A
@@ -104,14 +127,16 @@ def get_choice_listener() -> Callable[[ChoiceEvent], None] | None:
 
 
 def _notify(kernel: str, D: Dims, config: dict, source: str,
-            predicted_s: float | None, hw: HardwareParams) -> None:
+            predicted_s: float | None, hw: HardwareParams,
+            n_coalesced: int = 1) -> None:
     global _listener_error_warned
     if _choice_listener is None:
         return
     try:
         _choice_listener(ChoiceEvent(
             kernel=kernel, D=dict(D), config=dict(config), source=source,
-            predicted_s=predicted_s, hw_name=hw.name))
+            predicted_s=predicted_s, hw_name=hw.name,
+            n_coalesced=n_coalesced))
     except Exception:
         if not _listener_error_warned:
             _listener_error_warned = True
@@ -119,6 +144,70 @@ def _notify(kernel: str, D: Dims, config: dict, source: str,
                 "choice listener raised; telemetry for this process is "
                 "unreliable (further listener errors are suppressed)",
                 exc_info=True)
+
+
+# -- decision memo ------------------------------------------------------------
+# A per-(kernel, hw, D) memo consulted before everything else in
+# ``choose_or_default``: the steady-state serving hot path is one dict probe,
+# no registry traffic, no plan-table hash, no lock.  Entries are only ever
+# valid for one registry *generation* -- any mutation that could change a
+# decision (driver registration, refit invalidation, a pinned override, a
+# new plan table) bumps the generation and drops the whole memo, so a stale
+# config can never serve.
+#
+# With a choice listener installed, memo hits still feed telemetry: the
+# first ``MEMO_FULL_WINDOW`` hits per entry emit one full-fidelity event
+# each (original source, fresh predicted time -- indistinguishable from the
+# slow path, so drift detection sees a new fit at full rate), after which
+# hits are *coalesced* and one sampled event per ``MEMO_NOTIFY_EVERY``
+# launches carries the accumulated count.  With no listener, a memo hit
+# does no notification work at all.
+MEMO_FULL_WINDOW = 16
+MEMO_NOTIFY_EVERY = 64
+
+_memo_enabled = True
+
+
+def set_decision_memo(enabled: bool) -> bool:
+    """Enable/disable the steady-state decision memo (returns the previous
+    setting).  Disabling is for benchmarks and tests that need to measure
+    or exercise the un-memoized dispatch path; serving should leave it on."""
+    global _memo_enabled
+    prev = _memo_enabled
+    _memo_enabled = bool(enabled)
+    return prev
+
+
+def _memo_predicted(kernel: str, D: Dims, config: dict,
+                    hw: HardwareParams) -> float | None:
+    """Fresh rational-program estimate for an emitted memo event (only
+    computed for the events that are actually emitted)."""
+    drv = registry.get(kernel)
+    if drv is None:
+        return None
+    try:
+        return drv.estimate(D, config)
+    except Exception:
+        return None
+
+
+def _memo_notify(kernel: str, D: Dims, ent: list,
+                 hw: HardwareParams) -> None:
+    """Telemetry for one memo hit: full-fidelity inside the per-entry
+    window, coalesced-and-sampled after it.  ``ent`` is the mutable memo
+    entry ``[config, source, hits, pending]``."""
+    ent[2] += 1
+    ent[3] += 1
+    if ent[2] <= MEMO_FULL_WINDOW:
+        ent[3] = 0
+        _notify(kernel, D, ent[0], ent[1],
+                _memo_predicted(kernel, D, ent[0], hw), hw)
+        return
+    if ent[3] >= MEMO_NOTIFY_EVERY:
+        pending, ent[3] = ent[3], 0
+        _notify(kernel, D, ent[0], ent[1],
+                _memo_predicted(kernel, D, ent[0], hw), hw,
+                n_coalesced=pending)
 
 
 @dataclass
@@ -243,8 +332,46 @@ class _Registry:
         # plus the lazy per-shape fills for envelope misses.
         self._plans: dict[tuple[str, str], LaunchPlanTable] = {}
         self._plan_fills: dict[tuple, dict[str, int]] = {}
+        # Decision generation: bumped by every mutation that could change a
+        # launch decision (driver registration, refit invalidation, pinned
+        # override, plan registration).  Steady-state consumers -- the
+        # decision memo here, frozen StepPlans in core/step_plan.py --
+        # compare one int instead of re-verifying per-kernel state.
+        self._generation = 0
+        # The decision memo: (kernel, hw name, dkey(D)) -> mutable entry
+        # [config, source, hits, pending-notify].  Read without the lock on
+        # the hot path (a dict probe is atomic under the GIL); replaced
+        # wholesale on every generation bump so stale entries are
+        # unreachable, not just flagged.
+        self._memo: dict[tuple, list] = {}
         self._stats = _fresh_stats()
         self._lock = threading.Lock()
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def _bump_generation_locked(self) -> None:
+        self._generation += 1
+        self._memo = {}
+
+    def memo_get(self, key: tuple) -> list | None:
+        """Hot-path memo probe (lock-free; see ``_memo`` comment)."""
+        return self._memo.get(key)
+
+    def memo_store(self, generation: int, key: tuple,
+                   config: dict[str, int], source: str) -> None:
+        """Install a memo entry, unless the registry has moved on since the
+        decision was computed (a concurrent refit hot-swap between the
+        resolution and this store must not pin the old fit's choice)."""
+        with self._lock:
+            if generation == self._generation:
+                self._memo[key] = [dict(config), source, 0, 0]
+
+    def memo_hits(self) -> int:
+        """Total decision-memo hits (approximate under concurrency; summed
+        lazily from the per-entry counters so the hot path stays lock-free)."""
+        return sum(e[2] for e in list(self._memo.values()))
 
     def register(self, driver: DriverProgram) -> None:
         with self._lock:
@@ -257,6 +384,7 @@ class _Registry:
             # (cache read-through) keeps them.
             self._drop_plans_locked(driver.kernel,
                                     keep_source_hash=driver.source_hash)
+            self._bump_generation_locked()
 
     def get(self, kernel: str) -> DriverProgram | None:
         return self._drivers.get(kernel)
@@ -299,6 +427,9 @@ class _Registry:
         with self._lock:
             self._overrides[self._override_key(kernel, hw_name, D)] = \
                 dict(config)
+            # An override outranks every memoized decision -- including
+            # frozen StepPlans, which check the generation before serving.
+            self._bump_generation_locked()
 
     def override(self, kernel: str, hw_name: str,
                  D: Dims) -> dict[str, int] | None:
@@ -320,6 +451,7 @@ class _Registry:
         """
         with self._lock:
             self._plans[(plan.kernel, plan.hw_name)] = plan
+            self._bump_generation_locked()
 
     def plan(self, kernel: str, hw_name: str) -> LaunchPlanTable | None:
         return self._plans.get((kernel, hw_name))
@@ -402,6 +534,7 @@ class _Registry:
             self._overrides = {k: v for k, v in self._overrides.items()
                                if k[0] != kernel}
             self._drop_plans_locked(kernel)
+            self._bump_generation_locked()
 
     def clear(self) -> None:
         with self._lock:
@@ -412,6 +545,7 @@ class _Registry:
             self._plans.clear()
             self._plan_fills.clear()
             self._stats = _fresh_stats()
+            self._bump_generation_locked()
 
     def kernels(self) -> list[str]:
         return sorted(self._drivers)
@@ -601,11 +735,19 @@ def choose_or_default(kernel: str, D: Dims,
     """Tuned launch parameters if a plan, driver, or cache entry covers the
     shape, else ``default`` -- or, opt-in, a budgeted online search.
 
-    Dispatch order: a telemetry-pinned per-shape override (measured
-    evidence) outranks everything; then the compiled launch plan (O(1)
-    probe of precomputed choices -- see core/plan.py); then the driver's
-    vectorized rational-program evaluation (whose per-shape results lazily
-    join the plan); then the search escalation or the static default.
+    Dispatch order: the generation-scoped decision memo serves repeats of
+    an already-resolved (kernel, hw, shape) in one dict probe; on a memo
+    miss, a telemetry-pinned per-shape override (measured evidence)
+    outranks everything; then the compiled launch plan (O(1) probe of
+    precomputed choices -- see core/plan.py); then the driver's vectorized
+    rational-program evaluation (whose per-shape results lazily join the
+    plan); then the search escalation or the static default.  Memo entries
+    record the source that resolved them, and any registry mutation --
+    register, invalidate, override, new plan -- drops the memo, so the
+    fast path can never serve a decision the slow path would no longer
+    make.  A memo hit returns the entry's *shared* config dict (copying
+    would double the hit cost): callers read launch parameters out of it
+    and must never mutate it.
 
     This keeps model code runnable before any tuning has happened (the
     untuned path uses the static heuristic config, like un-instrumented CUDA
@@ -633,30 +775,62 @@ def choose_or_default(kernel: str, D: Dims,
     Telemetry-pinned per-shape overrides (measured evidence from a refit
     pass) outrank the driver's model-based choice.
     """
+    # Decision memo: the steady-state fast path.  One tuple build + one dict
+    # probe; valid entries are by construction from the current registry
+    # generation (the memo is dropped wholesale on any mutation), so the
+    # full dispatch chain below only runs once per (kernel, hw, shape) per
+    # generation.  The key uses D's *insertion* order, not sorted order:
+    # sorting costs ~2x the whole probe, and a call site always builds D
+    # the same way, so repeats hit -- two call sites that order the same
+    # shape differently just memoize it twice (both entries die together
+    # on invalidation).  The probe reads the registry's memo dict directly:
+    # the dict is replaced, never mutated, on a generation bump, so a bare
+    # .get is safe without the lock or a method-call frame.
+    if _memo_enabled:
+        mkey = (kernel, hw.name, tuple(D.items()))
+        ent = registry._memo.get(mkey)
+        if ent is not None:
+            if _choice_listener is not None:
+                _memo_notify(kernel, D, ent, hw)
+            else:
+                ent[2] += 1
+            # Shared, not copied (a copy costs ~20% of the whole hit):
+            # callers read launch parameters out of the config, never
+            # mutate it -- the same contract as StepPlan.resolve.
+            return ent[0]
+        # Snapshot before resolving: memo_store refuses the entry if a
+        # concurrent mutation moved the generation mid-resolution.
+        gen = registry.generation
     drv = get_driver(kernel, hw=hw)
     override = registry.override(kernel, hw.name, D)
     if override is not None:
-        pred = None
-        if drv is not None and _choice_listener is not None:
-            try:
-                pred = drv.estimate(D, override)
-            except Exception:
-                pred = None
-        _notify(kernel, D, override, "override", pred, hw)
+        if _memo_enabled:
+            registry.memo_store(gen, mkey, override, "override")
+        if _choice_listener is not None:
+            pred = None
+            if drv is not None:
+                try:
+                    pred = drv.estimate(D, override)
+                except Exception:
+                    pred = None
+            _notify(kernel, D, override, "override", pred, hw)
         return dict(override)
-    # Compiled launch plan: the steady-state O(1) dispatch path -- a probe
-    # of the precompiled (shape -> config) table, no rational-program
-    # evaluation.  Plans can serve even with no compiled driver at all
-    # (plan artifacts warm-start independently).
+    # Compiled launch plan: the O(1) cold-path dispatch -- a probe of the
+    # precompiled (shape -> config) table, no rational-program evaluation.
+    # Plans can serve even with no compiled driver at all (plan artifacts
+    # warm-start independently).
     plan_cfg = registry.plan_lookup(kernel, hw.name, D)
     if plan_cfg is not None:
-        pred = None
-        if drv is not None and _choice_listener is not None:
-            try:
-                pred = drv.estimate(D, plan_cfg)
-            except Exception:
-                pred = None
-        _notify(kernel, D, plan_cfg, "plan", pred, hw)
+        if _memo_enabled:
+            registry.memo_store(gen, mkey, plan_cfg, "plan")
+        if _choice_listener is not None:
+            pred = None
+            if drv is not None:
+                try:
+                    pred = drv.estimate(D, plan_cfg)
+                except Exception:
+                    pred = None
+            _notify(kernel, D, plan_cfg, "plan", pred, hw)
         return plan_cfg
     if drv is not None:
         try:
@@ -668,7 +842,8 @@ def choose_or_default(kernel: str, D: Dims,
             # envelope pays the rational program once, then dispatches O(1).
             registry.note_plan_fill(kernel, hw.name, D, cfg,
                                     source_hash=drv.source_hash)
-            pred = None
+            if _memo_enabled:
+                registry.memo_store(gen, mkey, cfg, "driver")
             if _choice_listener is not None:
                 # The prediction is telemetry garnish: a driver whose
                 # estimate() breaks must still serve its valid choice.
@@ -676,10 +851,14 @@ def choose_or_default(kernel: str, D: Dims,
                     pred = drv.estimate(D, cfg)
                 except Exception:
                     pred = None
-            _notify(kernel, D, cfg, "driver", pred, hw)
+                _notify(kernel, D, cfg, "driver", pred, hw)
             return cfg
     if spec is None and device is None:
-        _notify(kernel, D, default, "default", None, hw)
+        # Deliberately not memoized: the default is a per-call-site
+        # argument, so two callers with different heuristics must not see
+        # each other's fallback.
+        if _choice_listener is not None:
+            _notify(kernel, D, default, "default", None, hw)
         return dict(default)
     if spec is None or device is None:
         # Half an opt-in is a caller bug: silently running untuned would

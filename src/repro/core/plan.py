@@ -214,6 +214,14 @@ class LaunchPlanTable:
             ))
         return out
 
+    def to_device(self):
+        """Lower this table to a jit-traceable ``DevicePlanTable`` (see
+        core/device_plan.py).  Lazy import: plan artifacts must stay
+        loadable in processes that never touch jax."""
+        from .device_plan import DevicePlanTable
+
+        return DevicePlanTable.from_table(self)
+
     # -- persistence ---------------------------------------------------------
     def to_json(self) -> dict:
         """JSON-able payload (dense rows, rebuilt into a probe table on

@@ -1,0 +1,195 @@
+"""Per-step multi-kernel launch plans: every config for a serving step,
+resolved once, dispatched from a frozen dict.
+
+After PR 4 the steady-state decision is an O(1) *per-kernel* probe, but a
+serving step that launches N kernels still pays N ``choose_or_default``
+round-trips per distinct shape.  A ``StepPlan`` moves the whole decision
+set to step-build time: the engine declares the kernel launches one decode
+/ prefill step will make (``KernelRequest``s, derived from the model config
+by ``models.transformer.decode_kernel_requests``), and ``build_step_plan``
+resolves *all* of them up front -- pinned overrides and compiled plan
+tables first (they outrank the driver), then one batched ``choose_many``
+sweep per kernel over its remaining shapes, then the per-request static
+default.  The result is an immutable (kernel, shape) -> config dict;
+per-launch dispatch inside the step is ``StepPlan.resolve`` -- two dict
+probes and an int compare, no registry traffic at all.
+
+Staleness is generation-based, the same contract as the driver registry's
+decision memo: a StepPlan freezes ``registry.generation`` at build time and
+``resolve`` refuses to serve (returns None) the moment the registry moves
+on -- a refit hot-swap, a new plan table, or a telemetry-pinned override
+instantly invalidates every outstanding StepPlan, and the ops layer falls
+back to ``choose_or_default``, where the new state (override first) wins.
+That fallback ordering is what makes "pinned override > step plan >
+registry" hold without the hot path ever checking overrides itself.
+
+``use_step_plan`` installs a plan as ambient context (contextvar) so model
+code deep inside a jitted step function needs no plumbing: ``kernels.ops``
+consults the active plan before the registry.  Because JAX launch
+decisions happen at trace time, entering the context around a traced call
+is enough -- steady-state executions of the compiled step never re-enter
+Python dispatch at all.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+import numpy as np
+
+from .device_model import V5E, HardwareParams
+from .driver import Dims, dkey, get_driver, registry
+
+__all__ = ["KernelRequest", "StepPlan", "build_step_plan", "use_step_plan",
+           "active_step_plan"]
+
+
+@dataclass(frozen=True)
+class KernelRequest:
+    """One kernel launch a serving step will make: which kernel, at which
+    data parameters, with which static-default config if nothing tuned
+    covers it.  ``default`` uses the same heuristic constants the ops layer
+    falls back to, so a StepPlan-served step and a registry-served step
+    agree bit-for-bit even for untuned kernels."""
+
+    kernel: str
+    D: tuple          # dkey(D) form: sorted (name, value) pairs
+    default: tuple    # dkey(config) form
+
+    @classmethod
+    def make(cls, kernel: str, D: Dims,
+             default: Mapping[str, int]) -> "KernelRequest":
+        return cls(kernel=kernel, D=dkey(D), default=dkey(default))
+
+
+@dataclass(frozen=True)
+class StepPlan:
+    """Frozen (kernel, shape) -> config map for one serving step shape.
+
+    ``resolve`` is the hot path: one staleness check (int compare against
+    the live registry generation) and one dict probe.  The returned config
+    dict is shared, not copied -- callers read, never mutate.  A stale or
+    missing entry returns None and the caller falls through to
+    ``choose_or_default``.
+    """
+
+    hw_name: str
+    generation: int
+    table: dict = field(repr=False)   # (kernel, dkey(D)) -> config dict
+    sources: dict = field(repr=False)  # (kernel, dkey(D)) -> source str
+
+    def stale(self) -> bool:
+        return registry.generation != self.generation
+
+    def resolve(self, kernel: str, D: Dims) -> dict | None:
+        if registry.generation != self.generation:
+            return None
+        return self.table.get((kernel, dkey(D)))
+
+    def __len__(self) -> int:
+        return len(self.table)
+
+    def describe(self) -> dict:
+        """Summary for logs/demos: entry count + per-source breakdown."""
+        by_source: dict[str, int] = {}
+        for s in self.sources.values():
+            by_source[s] = by_source.get(s, 0) + 1
+        return {"entries": len(self.table), "generation": self.generation,
+                "hw_name": self.hw_name, "sources": by_source}
+
+
+def build_step_plan(requests: Iterable[KernelRequest],
+                    hw: HardwareParams = V5E) -> StepPlan:
+    """Resolve every request into one frozen ``StepPlan``.
+
+    Resolution order per request mirrors ``choose_or_default`` exactly:
+    pinned override, then compiled plan table, then the driver -- but all
+    driver decisions for one kernel happen in a *single* batched
+    ``choose_many`` sweep over the distinct shapes (the whole point: one
+    vectorized rational-program evaluation per kernel per step shape, not
+    one per launch) -- then the request's static default.
+
+    The plan snapshots ``registry.generation`` *before* resolving; if a
+    concurrent mutation lands mid-build, the plan is born stale and
+    ``resolve`` correctly refuses to serve it.
+    """
+    generation = registry.generation
+    reqs = list(requests)
+    table: dict = {}
+    sources: dict = {}
+    # Group driver-undecided requests per kernel for the batched sweep.
+    pending: dict[str, list[KernelRequest]] = {}
+    for r in reqs:
+        key = (r.kernel, r.D)
+        if key in table:
+            continue
+        D = dict(r.D)
+        override = registry.override(r.kernel, hw.name, D)
+        if override is not None:
+            table[key] = dict(override)
+            sources[key] = "override"
+            continue
+        plan_cfg = registry.plan_lookup(r.kernel, hw.name, D)
+        if plan_cfg is not None:
+            table[key] = plan_cfg
+            sources[key] = "plan"
+            continue
+        pending.setdefault(r.kernel, []).append(r)
+    for kernel, krs in pending.items():
+        drv = get_driver(kernel, hw=hw)
+        decided: dict[tuple, dict] = {}
+        if drv is not None and krs:
+            # One choose_many over the kernel's distinct shapes: columnar
+            # D_table, one row per request shape.
+            shapes = [dict(r.D) for r in krs]
+            try:
+                cols = {d: np.asarray([s[d] for s in shapes], dtype=np.int64)
+                        for d in drv.data_params}
+                configs, ok = drv.choose_many(cols)  # counts its own rows
+                for i, r in enumerate(krs):
+                    if bool(ok[i]):
+                        decided[r.D] = {p: int(configs[p][i])
+                                        for p in drv.program_params}
+            except (ValueError, KeyError, TypeError):
+                decided = {}   # stale/mismatched driver: defaults below
+        for r in krs:
+            key = (r.kernel, r.D)
+            cfg = decided.get(r.D)
+            if cfg is not None:
+                table[key] = cfg
+                sources[key] = "driver"
+                # Driver decisions lazily join the kernel's plan table,
+                # exactly as the per-call path would have done.
+                registry.note_plan_fill(kernel, hw.name, dict(r.D), cfg,
+                                        source_hash=drv.source_hash)
+            else:
+                table[key] = dict(r.default)
+                sources[key] = "default"
+    return StepPlan(hw_name=hw.name, generation=generation,
+                    table=table, sources=sources)
+
+
+# -- ambient plan context -----------------------------------------------------
+# A contextvar, not a module global: several engines (or an engine plus a
+# background refit) in one process must not see each other's step plans.
+_active_plan: contextvars.ContextVar[StepPlan | None] = \
+    contextvars.ContextVar("active_step_plan", default=None)
+
+
+def active_step_plan() -> StepPlan | None:
+    return _active_plan.get()
+
+
+@contextlib.contextmanager
+def use_step_plan(plan: StepPlan | None):
+    """Make ``plan`` the ambient step plan for the enclosed trace/call.
+    Ops consult it before the registry; None temporarily disables an outer
+    plan."""
+    token = _active_plan.set(plan)
+    try:
+        yield plan
+    finally:
+        _active_plan.reset(token)

@@ -19,6 +19,14 @@ shape (core/plan.py -- precompiled over the serving traffic envelope, lazily
 filled for stragglers) dispatch is an O(1) probe of the plan table;
 otherwise the loaded driver makes the decision in one vectorized
 rational-program evaluation over the whole candidate table.
+
+A *step plan* (core/step_plan.py) short-circuits all of that: when a
+serving engine has pre-resolved every kernel config for its step shape,
+ops read the frozen plan (explicit ``plan=`` argument, or the ambient
+``use_step_plan`` context) and never touch the registry.  Step plans are
+generation-checked, so the moment a refit or a pinned override lands they
+go stale and dispatch falls back to ``choose_or_default``, where the new
+state wins.
 """
 
 from __future__ import annotations
@@ -29,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.driver import choose_or_default, fit_tile as _fit_tile
+from repro.core.step_plan import active_step_plan
 
 from . import ref
 from .flash_attention import flash_attention_pallas
@@ -47,15 +56,53 @@ GMM_DEFAULT = {"bg": 128, "bn": 512, "bk": 512}
 SSD_DEFAULT = {"chunk": 256}
 
 
+def _resolve(kernel: str, D: dict, default: dict, plan) -> dict:
+    """Launch-config resolution for one op call.
+
+    An explicit ``plan=`` argument wins; otherwise the ambient step plan
+    (``core.step_plan.use_step_plan``) is consulted.  A plan hit is the
+    zero-registry-traffic path; a miss -- including a plan gone stale
+    because the registry generation moved (refit, new override) -- falls
+    through to the full ``choose_or_default`` chain, which is what keeps
+    pinned overrides ranked above any frozen step plan.
+    """
+    if plan is None:
+        plan = active_step_plan()
+    if plan is not None:
+        cfg = plan.resolve(kernel, D)
+        if cfg is not None:
+            return cfg
+    return choose_or_default(kernel, D, default)
+
+
+@functools.lru_cache(maxsize=128)
+def _batched_matmul(bm: int, bn: int, bk: int, interpret: bool,
+                    out_dtype_name: str | None):
+    """Cached vmapped batched-matmul closure, keyed on (tiles, out dtype).
+
+    A per-call ``jax.vmap(lambda ...)`` is a fresh function identity every
+    time, so an enclosing ``jax.jit`` re-traces on every batched matmul
+    call; caching the closure (and threading ``y`` as an argument instead
+    of capturing it) makes repeated batched calls hit the trace cache.
+    """
+    out_dtype = jnp.dtype(out_dtype_name) if out_dtype_name else None
+
+    def one(a, y):
+        return matmul_pallas(a, y, bm=bm, bn=bn, bk=bk, interpret=interpret,
+                             out_dtype=out_dtype)
+
+    return jax.vmap(one, in_axes=(0, None))
+
+
 def matmul(x: jax.Array, y: jax.Array, *, use_pallas: bool = False,
-           interpret: bool = True, out_dtype=None) -> jax.Array:
+           interpret: bool = True, out_dtype=None, plan=None) -> jax.Array:
     """Tuned matmul over the last two dims; leading dims are batched."""
     if not use_pallas:
         return ref.matmul_ref(x, y, out_dtype)
     m, k = x.shape[-2], x.shape[-1]
     n = y.shape[-1]
     key = "matmul_b16" if x.dtype == jnp.bfloat16 else "matmul_b32"
-    cfg = choose_or_default(key, {"m": m, "n": n, "k": k}, MATMUL_DEFAULT)
+    cfg = _resolve(key, {"m": m, "n": n, "k": k}, MATMUL_DEFAULT, plan)
     bm = _fit_tile(m, cfg["bm"], 8)
     bn = _fit_tile(n, cfg["bn"], 128)
     bk = _fit_tile(k, cfg["bk"], 128)
@@ -64,10 +111,10 @@ def matmul(x: jax.Array, y: jax.Array, *, use_pallas: bool = False,
                              out_dtype=out_dtype)
     lead = x.shape[:-2]
     xf = x.reshape((-1,) + x.shape[-2:])
-    out = jax.vmap(
-        lambda a: matmul_pallas(a, y, bm=bm, bn=bn, bk=bk,
-                                interpret=interpret, out_dtype=out_dtype)
-    )(xf)
+    batched = _batched_matmul(
+        bm, bn, bk, interpret,
+        jnp.dtype(out_dtype).name if out_dtype is not None else None)
+    out = batched(xf, y)
     return out.reshape(lead + out.shape[-2:])
 
 
@@ -77,7 +124,7 @@ def flash_attention(
     causal: bool = True, window: int | None = None,
     softcap: float | None = None, scale: float | None = None,
     use_pallas: bool = False, interpret: bool = True,
-    q_chunk: int | None = None,
+    q_chunk: int | None = None, plan=None,
 ) -> jax.Array:
     """(b*hq, sq, d) x (b*hkv, skv, d)^2 -> (b*hq, sq, d), tuned tiles."""
     if not use_pallas:
@@ -88,8 +135,8 @@ def flash_attention(
     bh, sq, d = q.shape
     skv = k.shape[1]
     key = f"flash_attn_d{d}" + ("_causal" if causal else "")
-    cfg = choose_or_default(key, {"bh": bh, "sq": sq, "skv": skv},
-                            FLASH_DEFAULT)
+    cfg = _resolve(key, {"bh": bh, "sq": sq, "skv": skv},
+                   FLASH_DEFAULT, plan)
     bq = _fit_tile(sq, cfg["bq"], 8)
     bkv = _fit_tile(skv, cfg["bkv"], 128)
     return flash_attention_pallas(
@@ -99,14 +146,14 @@ def flash_attention(
 
 
 def moe_gmm(x: jax.Array, w: jax.Array, *, use_pallas: bool = False,
-            interpret: bool = True) -> jax.Array:
+            interpret: bool = True, plan=None) -> jax.Array:
     """(e, g, k) @ (e, k, n) -> (e, g, n), tuned tiles."""
     if not use_pallas:
         return ref.moe_gmm_ref(x, w)
     e, g, k = x.shape
     n = w.shape[-1]
-    cfg = choose_or_default("moe_gmm_b16", {"e": e, "g": g, "k": k, "n": n},
-                            GMM_DEFAULT)
+    cfg = _resolve("moe_gmm_b16", {"e": e, "g": g, "k": k, "n": n},
+                   GMM_DEFAULT, plan)
     bg = _fit_tile(g, cfg["bg"], 8)
     bn = _fit_tile(n, cfg["bn"], 128)
     bk = _fit_tile(k, cfg["bk"], 128)
@@ -115,15 +162,15 @@ def moe_gmm(x: jax.Array, w: jax.Array, *, use_pallas: bool = False,
 
 def ssd_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
              A: jax.Array, *, use_pallas: bool = False,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool = True, plan=None) -> jax.Array:
     """Mamba-2 SSD scan with tuned chunk length."""
     if not use_pallas:
         return ref.ssd_scan_ref(x, dt, B, C, A)
     bh, s, dh = x.shape
     n = B.shape[-1]
-    cfg = choose_or_default(
+    cfg = _resolve(
         f"ssd_scan_h{dh}_n{n}", {"bh": bh, "s": s, "chunkflops": 1},
-        SSD_DEFAULT)
+        SSD_DEFAULT, plan)
     chunk = _fit_tile(s, cfg["chunk"], 128) if s >= 128 else s
     return ssd_scan_pallas(x, dt, B, C, A, chunk=chunk, interpret=interpret)
 
@@ -155,7 +202,8 @@ def _colsum_auto(dtype_bytes: int):
 
 def layernorm(x: jax.Array, res: jax.Array, gamma: jax.Array,
               beta: jax.Array, *, eps: float = 1e-6,
-              use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+              use_pallas: bool = False, interpret: bool = True,
+              plan=None) -> jax.Array:
     """Fused layernorm + residual with an introspection-tuned row tile."""
     if not use_pallas:
         return ref.layernorm_ref(x, res, gamma, beta, eps=eps)
@@ -163,14 +211,14 @@ def layernorm(x: jax.Array, res: jax.Array, gamma: jax.Array,
 
     r, c = x.shape
     ak = _layernorm_auto(c, 2 if x.dtype == jnp.bfloat16 else 4)
-    cfg = ak.fit_config(choose_or_default(ak.name, {"r": r}, ak.defaults),
+    cfg = ak.fit_config(_resolve(ak.name, {"r": r}, ak.defaults, plan),
                         {"r": r})
     return layernorm_pallas(x, res, gamma, beta, br=cfg["br"], eps=eps,
                             interpret=interpret)
 
 
 def blocked_colsum(x: jax.Array, *, use_pallas: bool = False,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True, plan=None) -> jax.Array:
     """Column sums of (r, c) with introspection-tuned (br, bc) tiles."""
     if not use_pallas:
         return ref.colsum_ref(x)
@@ -179,7 +227,7 @@ def blocked_colsum(x: jax.Array, *, use_pallas: bool = False,
     r, c = x.shape
     ak = _colsum_auto(2 if x.dtype == jnp.bfloat16 else 4)
     cfg = ak.fit_config(
-        choose_or_default(ak.name, {"r": r, "c": c}, ak.defaults),
+        _resolve(ak.name, {"r": r, "c": c}, ak.defaults, plan),
         {"r": r, "c": c})
     return colsum_pallas(x, br=cfg["br"], bc=cfg["bc"],
                          interpret=interpret)[0]

@@ -89,7 +89,8 @@ def build_telemetry(seed: int = 0, auto_kernels=()):
 
 def build_engine(cfg, batch: int, max_seq: int, mesh=None, params=None,
                  seed: int = 0, telemetry=None,
-                 plan_envelope=None, auto_kernels=None) -> ServingEngine:
+                 plan_envelope=None, auto_kernels=None,
+                 step_plans: bool = True) -> ServingEngine:
     model = Model(cfg)
     sharder = Sharder(mesh=mesh, rules=decode_rules())
     if params is None:
@@ -97,7 +98,8 @@ def build_engine(cfg, batch: int, max_seq: int, mesh=None, params=None,
     return ServingEngine(model, params, sharder, batch=batch,
                          max_seq=max_seq, telemetry=telemetry,
                          plan_envelope=plan_envelope,
-                         auto_kernels=auto_kernels)
+                         auto_kernels=auto_kernels,
+                         step_plans=step_plans)
 
 
 def main() -> None:
@@ -117,6 +119,10 @@ def main() -> None:
     ap.add_argument("--plans", action="store_true",
                     help="precompile launch plans for the default decode "
                          "traffic envelope at warm start (O(1) dispatch)")
+    ap.add_argument("--no-step-plans", action="store_true",
+                    help="disable the per-step launch plan (every traced "
+                         "kernel dispatch goes through the registry instead "
+                         "of the engine's frozen per-step config table)")
     ap.add_argument("--auto-kernels", action="store_true",
                     help="introspect + tune the auto-specced kernels "
                          "(layernorm fusion, blocked column reduction) and "
@@ -141,7 +147,8 @@ def main() -> None:
     envelope = (default_plan_envelope(args.batch, args.max_seq)
                 if args.plans else None)
     engine = build_engine(cfg, args.batch, args.max_seq, telemetry=telemetry,
-                          plan_envelope=envelope, auto_kernels=auto)
+                          plan_envelope=envelope, auto_kernels=auto,
+                          step_plans=not args.no_step_plans)
     ws = engine.warm_started
     print(f"warm start: {len(ws)} driver(s) loaded {list(ws)}, "
           f"{len(ws.plans_loaded)} plan(s), "
@@ -153,6 +160,10 @@ def main() -> None:
               f"{len(ps['loaded'])} loaded from cache, "
               f"{len(ps['skipped'])} skipped (no driver), "
               f"{ps['entries']} plan entries")
+    if engine._step_plan is not None:
+        sp = engine._step_plan.describe()
+        print(f"step plan: {sp['entries']} kernel configs frozen at "
+              f"generation {sp['generation']} ({sp['sources']})")
     for i in range(args.requests):
         prompt = [2 + (i * 7 + j) % (cfg.vocab_size - 3)
                   for j in range(4 + i % 4)]

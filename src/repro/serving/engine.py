@@ -23,6 +23,12 @@ envelope lazily join the plan after one driver decision.  For shapes with
 *no* cached driver, ``tune_for_shape`` runs a budget-aware online search
 (repro.search) instead of falling back to static defaults forever.
 
+On top of both, ``step_plans=True`` (default) builds a *per-step launch
+plan* (core/step_plan.py) for models that dispatch Pallas kernels: every
+kernel config the decode step needs, resolved in one pass at engine start
+and re-frozen whenever the driver registry's generation moves, so the
+traced step reads a frozen dict instead of making N registry round-trips.
+
 Passing ``telemetry=`` (a ``repro.telemetry.Telemetry``) opts the engine
 into runtime observability: every launch decision is counted, a sampled
 subset is shadow-probed against the device oracle, and drivers whose
@@ -65,7 +71,8 @@ class Request:
 class ServingEngine:
     def __init__(self, model, params, sharder, batch: int, max_seq: int,
                  eos_id: int = 1, seed: int = 0, warm_start: bool = True,
-                 telemetry=None, plan_envelope=None, auto_kernels=None):
+                 telemetry=None, plan_envelope=None, auto_kernels=None,
+                 step_plans: bool = True):
         self.model = model
         self.params = params
         self.sharder = sharder
@@ -110,6 +117,20 @@ class ServingEngine:
         if envelope:
             from repro.core.plan import precompile_plans
             self.plan_summary = precompile_plans(envelope)
+
+        # Per-step launch plan (core/step_plan.py): every kernel config the
+        # decode/prefill step will need, resolved in one pass (pinned
+        # overrides + plan tables + one batched choose_many per kernel) and
+        # frozen; the jitted step traces under ``use_step_plan`` so ops
+        # dispatch from the frozen dict with zero registry traffic.  The
+        # plan is generation-checked -- a telemetry refit or a pinned
+        # override makes it stale and the next step rebuilds it, so fresh
+        # evidence wins immediately.  Only built for models that actually
+        # dispatch Pallas kernels.
+        self.step_plans = step_plans
+        self._step_plan = None
+        if step_plans:
+            self._refresh_step_plan()
 
         self.cache = model.init_cache(batch, max_seq)
         self.slot_req: list[Request | None] = [None] * batch
@@ -165,6 +186,31 @@ class ServingEngine:
         return self.finished
 
     # -- internals ---------------------------------------------------------------
+    def _refresh_step_plan(self) -> None:
+        cfg = getattr(self.model, "cfg", None)
+        if cfg is None or not getattr(cfg, "use_pallas", False):
+            self._step_plan = None
+            return
+        from repro.core.step_plan import build_step_plan
+        from repro.models.transformer import decode_kernel_requests
+
+        self._step_plan = build_step_plan(
+            decode_kernel_requests(cfg, self.batch, self.max_seq))
+
+    def _run_step(self, tok, ps):
+        """One jitted step under the active step plan (rebuilt first if the
+        registry generation moved -- the rebuild re-resolves against the
+        new state, so a fresh override or refit takes effect on the very
+        next trace)."""
+        if self._step_plan is None:
+            return self._step(self.params, tok, ps, self.cache)
+        if self._step_plan.stale():
+            self._refresh_step_plan()
+        from repro.core.step_plan import use_step_plan
+
+        with use_step_plan(self._step_plan):
+            return self._step(self.params, tok, ps, self.cache)
+
     def _fill_slots(self) -> None:
         for s in range(self.batch):
             if self.slot_req[s] is not None or not self.pending:
@@ -183,16 +229,14 @@ class ServingEngine:
         ps = np.array(self.slot_pos, np.int32)
         tok[slot] = token
         ps[slot] = pos
-        _, self.cache = self._step(self.params, jnp.asarray(tok),
-                                   jnp.asarray(ps), self.cache)
+        _, self.cache = self._run_step(jnp.asarray(tok), jnp.asarray(ps))
 
     def _decode_once(self) -> None:
         active = [s for s in range(self.batch) if self.slot_req[s] is not None]
         if not active:
             return
-        logits, self.cache = self._step(
-            self.params, jnp.asarray(self.slot_last),
-            jnp.asarray(self.slot_pos), self.cache)
+        logits, self.cache = self._run_step(
+            jnp.asarray(self.slot_last), jnp.asarray(self.slot_pos))
         self.key, sub = jax.random.split(self.key)
         temps = {r.temperature for s, r in enumerate(self.slot_req)
                  if r is not None}

@@ -9,7 +9,11 @@ rely on.
 Counter semantics (all monotonic within a process):
   * ``choices_total`` / ``choices_by_source`` -- every instrumented
     ``choose_or_default`` decision, split by path (driver / override /
-    search / search_memo / default).
+    plan / search / search_memo / default).  Decision-memo hits past the
+    full-fidelity window arrive as *coalesced* events
+    (``ChoiceEvent.n_coalesced``); these counters account for every launch
+    a coalesced event stands for, so totals reflect traffic volume even
+    though the listener fires on a sampled subset.
   * ``fallback_default_total`` -- launches served by the static heuristic
     (the "untuned forever" signal the subsystem exists to drive to zero).
   * ``shadow_probes_total`` / ``probe_device_seconds_total`` -- sampled

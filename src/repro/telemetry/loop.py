@@ -113,12 +113,16 @@ class Telemetry:
     # -- the loop ------------------------------------------------------------
     def _on_choice(self, event: ChoiceEvent) -> None:
         c = self.counters
+        # A coalesced event stands for n_coalesced launches (the decision
+        # memo batches steady-state hits); counters account for all of
+        # them, the shadow-probe sampling below sees one event.
+        n = event.n_coalesced
         with self._lock:
-            c.choices_total += 1
+            c.choices_total += n
             c.choices_by_source[event.source] = \
-                c.choices_by_source.get(event.source, 0) + 1
+                c.choices_by_source.get(event.source, 0) + n
             if event.source == "default":
-                c.fallback_default_total += 1
+                c.fallback_default_total += n
             if self._reacting:
                 return          # choices made *by* a refit: count only
             stats, do_probe = self.recorder.observe_choice(event)

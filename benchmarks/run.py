@@ -71,6 +71,14 @@ def main() -> None:
             print(line, flush=True)
     except Exception as e:
         print(f"introspect/skipped,0,{e!r}", flush=True)
+    # Trailing: tracing overhead must not mask the benches above (and
+    # vice versa).
+    try:
+        from benchmarks import bench_trace
+        for line in bench_trace.main([]):
+            print(line, flush=True)
+    except Exception as e:
+        print(f"trace/skipped,0,{e!r}", flush=True)
 
 
 if __name__ == "__main__":

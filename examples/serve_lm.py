@@ -2,6 +2,10 @@
 batching engine (more requests than decode slots -> slots are recycled).
 
     PYTHONPATH=src python examples/serve_lm.py --requests 10 --batch 4
+
+``--trace out.json`` records the whole run (engine bring-up, prefill,
+decode steps, kernel dispatch) as a nested span tree and writes a Chrome
+trace-event file to load in ui.perfetto.dev.
 """
 
 import argparse
@@ -19,10 +23,16 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=96)
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace-event JSON of the run")
     args = ap.parse_args()
 
+    tracer = None
+    if args.trace:
+        from repro.trace import Tracer
+        tracer = Tracer()
     cfg = get_config(args.arch, smoke=True)
-    engine = build_engine(cfg, args.batch, args.max_seq)
+    engine = build_engine(cfg, args.batch, args.max_seq, trace=tracer)
     t0 = time.perf_counter()
     for i in range(args.requests):
         prompt = [2 + (13 * i + j) % (cfg.vocab_size - 4)
@@ -47,6 +57,10 @@ def main() -> None:
               f"from the frozen table, zero registry round-trips")
     from repro.core.driver import registry
     print(f"decision-memo hits this run: {registry.memo_hits()}")
+    if tracer is not None:
+        n = tracer.write_chrome_trace(args.trace)
+        tracer.uninstall()
+        print(f"trace: {n} spans -> {args.trace} (open in ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

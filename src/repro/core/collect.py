@@ -35,6 +35,8 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from repro.trace import trace_span
+
 from .device_model import DeviceModel, HardwareParams, V5E
 from .kernel_spec import KernelSpec
 
@@ -160,38 +162,54 @@ def collect(
     stage_blocks: list[np.ndarray] = []
     n_exec = 0
     device_seconds = 0.0
-    for D, ledger in zip(probe_data, ledgers):
-        table = spec.candidates(D, hw)
-        if not len(table):
-            continue
+    strategy_fp = dict(strategy.fingerprint())
+    budget_fp = dict(budget.fingerprint()) if budget is not None else None
+    with trace_span("collect", kernel=spec.name, n_batches=len(probe_data),
+                    strategy=strategy_fp, budget=budget_fp) as csp:
+        for D, ledger in zip(probe_data, ledgers):
+            with trace_span("collect.batch", kernel=spec.name, D=dict(D),
+                            strategy=strategy_fp, budget=budget_fp) as bsp:
+                table = spec.candidates(D, hw)
+                if not len(table):
+                    bsp.set(n_candidates=0)
+                    continue
 
-        def record(indices: np.ndarray, probe) -> None:
-            n = int(indices.size)
-            t_tot = probe.total_time_s
-            t_mem = probe.mem_time_s
-            t_cmp = probe.compute_time_s
-            steps = np.maximum(probe.grid_steps, 1)
-            buffers = np.minimum(
-                hw.vmem_bytes // np.maximum(probe.vmem_stage_bytes, 1),
-                max_stages)
-            skeleton = np.where(buffers >= 2, np.maximum(t_mem, t_cmp),
-                                t_mem + t_cmp)
-            ovh = np.maximum((t_tot - skeleton) / steps, 1e-9)
-            for d, v in D.items():
-                col_blocks[d].append(np.full(n, int(v), dtype=np.int64))
-            for p in spec.program_params:
-                col_blocks[p].append(table[p][indices])
-            met_blocks["total_time_s"].append(t_tot)
-            met_blocks["mem_step"].append(t_mem / steps)
-            met_blocks["cmp_step"].append(t_cmp / steps)
-            met_blocks["ovh_step"].append(ovh)
-            steps_blocks.append(steps)
-            stage_blocks.append(probe.vmem_stage_bytes)
+                def record(indices: np.ndarray, probe) -> None:
+                    n = int(indices.size)
+                    t_tot = probe.total_time_s
+                    t_mem = probe.mem_time_s
+                    t_cmp = probe.compute_time_s
+                    steps = np.maximum(probe.grid_steps, 1)
+                    buffers = np.minimum(
+                        hw.vmem_bytes
+                        // np.maximum(probe.vmem_stage_bytes, 1),
+                        max_stages)
+                    skeleton = np.where(buffers >= 2,
+                                        np.maximum(t_mem, t_cmp),
+                                        t_mem + t_cmp)
+                    ovh = np.maximum((t_tot - skeleton) / steps, 1e-9)
+                    for d, v in D.items():
+                        col_blocks[d].append(
+                            np.full(n, int(v), dtype=np.int64))
+                    for p in spec.program_params:
+                        col_blocks[p].append(table[p][indices])
+                    met_blocks["total_time_s"].append(t_tot)
+                    met_blocks["mem_step"].append(t_mem / steps)
+                    met_blocks["cmp_step"].append(t_cmp / steps)
+                    met_blocks["ovh_step"].append(ovh)
+                    steps_blocks.append(steps)
+                    stage_blocks.append(probe.vmem_stage_bytes)
 
-        search_table(spec, device, D, table, strategy, ledger, rng,
-                     hw=hw, default_repeats=repeats, observer=record)
-        n_exec += ledger.spent_executions
-        device_seconds += ledger.spent_device_seconds
+                search_table(spec, device, D, table, strategy, ledger, rng,
+                             hw=hw, default_repeats=repeats,
+                             observer=record)
+                n_exec += ledger.spent_executions
+                device_seconds += ledger.spent_device_seconds
+                bsp.set(n_candidates=len(table),
+                        executions=ledger.spent_executions,
+                        device_seconds=ledger.spent_device_seconds)
+        csp.set(n_probe_executions=n_exec,
+                probe_device_seconds=device_seconds)
 
     def _cat(blocks, dtype=None):
         if not blocks:

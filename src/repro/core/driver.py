@@ -19,10 +19,13 @@ from __future__ import annotations
 import functools
 import logging
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Mapping
 
 import numpy as np
+
+from repro.trace import trace_span
 
 from .codegen import compile_driver_module
 from .device_model import HardwareParams, V5E
@@ -91,6 +94,11 @@ class ChoiceEvent:
     the per-key full-fidelity window are *coalesced* into one sampled
     event carrying how many launches it stands for, so the listener still
     sees traffic volume without the hot path paying one event per launch.
+
+    ``t_ns`` is a monotonic-clock stamp (``time.monotonic_ns``) taken at
+    emission so the flight ledger and traces can order events without
+    wall-clock skew.  It is only read -- and the clock only consulted --
+    when a listener is installed; the no-listener path stays zero-overhead.
     """
 
     kernel: str
@@ -100,6 +108,7 @@ class ChoiceEvent:
     predicted_s: float | None
     hw_name: str
     n_coalesced: int = 1
+    t_ns: int | None = None
 
 
 # Process-wide choice listener (repro.telemetry installs itself here).  A
@@ -136,7 +145,7 @@ def _notify(kernel: str, D: Dims, config: dict, source: str,
         _choice_listener(ChoiceEvent(
             kernel=kernel, D=dict(D), config=dict(config), source=source,
             predicted_s=predicted_s, hw_name=hw.name,
-            n_coalesced=n_coalesced))
+            n_coalesced=n_coalesced, t_ns=time.monotonic_ns()))
     except Exception:
         if not _listener_error_warned:
             _listener_error_warned = True
@@ -317,7 +326,8 @@ _MISS = object()
 def _fresh_stats() -> dict[str, int]:
     return {"disk_cache_hits": 0, "disk_cache_misses": 0,
             "plan_hits": 0, "plan_misses": 0,
-            "choose_many_calls": 0, "choose_many_rows": 0}
+            "choose_many_calls": 0, "choose_many_rows": 0,
+            "plan_invalidations": 0, "memo_invalidations": 0}
 
 
 class _Registry:
@@ -353,7 +363,16 @@ class _Registry:
 
     def _bump_generation_locked(self) -> None:
         self._generation += 1
+        if self._memo:
+            # Count only bumps that actually discarded memoized decisions:
+            # that is the churn an operator cares about (each one means the
+            # steady-state fast path re-resolves every live shape).
+            self._stats["memo_invalidations"] += 1
         self._memo = {}
+
+    def memo_size(self) -> int:
+        """Live decision-memo entry count (gauge; lock-free like the probe)."""
+        return len(self._memo)
 
     def memo_get(self, key: tuple) -> list | None:
         """Hot-path memo probe (lock-free; see ``_memo`` comment)."""
@@ -508,6 +527,7 @@ class _Registry:
                                          or p.source_hash != keep_source_hash)]
         for k in doomed:
             del self._plans[k]
+        self._stats["plan_invalidations"] += len(doomed)
         if doomed or keep_source_hash is None:
             self._plan_fills = {k: v for k, v in self._plan_fills.items()
                                 if k[0] != kernel}
@@ -544,8 +564,10 @@ class _Registry:
             self._overrides.clear()
             self._plans.clear()
             self._plan_fills.clear()
-            self._stats = _fresh_stats()
             self._bump_generation_locked()
+            # After the bump: a full clear() resets the churn counters too,
+            # rather than recording itself as an invalidation.
+            self._stats = _fresh_stats()
 
     def kernels(self) -> list[str]:
         return sorted(self._drivers)
@@ -702,25 +724,29 @@ def warm_start_from_cache(kernels: list[str] | None = None,
     cache = default_cache()
     names = kernels if kernels is not None else cache.kernels()
     summary = WarmStartSummary()
-    for name in names:
-        drv = registry.get(name)
-        if drv is not None:
-            summary.already_registered += 1
-        else:
-            entry = cache.lookup_latest(name, hw_name=hw.name)
-            if entry is None:
-                summary.skipped_no_entry += 1
+    with trace_span("warm_start", hw=hw.name) as sp:
+        for name in names:
+            drv = registry.get(name)
+            if drv is not None:
+                summary.already_registered += 1
             else:
-                drv = _driver_from_entry(name, entry, hw)
-                if drv is None:
-                    summary.skipped_bad += 1
+                entry = cache.lookup_latest(name, hw_name=hw.name)
+                if entry is None:
+                    summary.skipped_no_entry += 1
                 else:
-                    registry.register(drv)
-                    summary.append(name)
-        if not plans or registry.plan(name, hw.name) is not None:
-            continue
-        if _install_plan_if_matching(name, drv, hw, cache):
-            summary.plans_loaded.append(name)
+                    drv = _driver_from_entry(name, entry, hw)
+                    if drv is None:
+                        summary.skipped_bad += 1
+                    else:
+                        registry.register(drv)
+                        summary.append(name)
+            if not plans or registry.plan(name, hw.name) is not None:
+                continue
+            if _install_plan_if_matching(name, drv, hw, cache):
+                summary.plans_loaded.append(name)
+        sp.set(loaded=len(summary), plans_loaded=len(summary.plans_loaded),
+               skipped_no_entry=summary.skipped_no_entry,
+               skipped_bad=summary.skipped_bad)
     return summary
 
 

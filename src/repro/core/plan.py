@@ -286,18 +286,25 @@ def compile_plan(driver, D_table: Mapping[str, Sequence[int]],
     rows are frozen into a ``LaunchPlanTable`` stamped with the driver's
     tuning generation.
     """
+    from repro.trace import trace_span
+
     cols = {d: np.asarray(D_table[d], dtype=np.int64).reshape(-1)
             for d in driver.data_params}
-    configs, ok = driver.choose_many(cols, margin=margin)
-    return LaunchPlanTable.build(
-        kernel=driver.kernel,
-        hw_name=driver.hw.name,
-        data_params=driver.data_params,
-        program_params=driver.program_params,
-        shapes=cols, configs=configs, ok=ok,
-        tuning_version=driver.tuning_version,
-        source_hash=driver.source_hash,
-    )
+    with trace_span("compile_plan", kernel=driver.kernel) as sp:
+        configs, ok = driver.choose_many(cols, margin=margin)
+        table = LaunchPlanTable.build(
+            kernel=driver.kernel,
+            hw_name=driver.hw.name,
+            data_params=driver.data_params,
+            program_params=driver.program_params,
+            shapes=cols, configs=configs, ok=ok,
+            tuning_version=driver.tuning_version,
+            source_hash=driver.source_hash,
+        )
+        sp.set(n_shapes=int(cols[driver.data_params[0]].shape[0])
+               if driver.data_params else 0,
+               n_entries=len(table))
+    return table
 
 
 def precompile_plans(
@@ -321,6 +328,8 @@ def precompile_plans(
     """
     import time
 
+    from repro.trace import trace_span
+
     from .cache import PlanEntry, default_cache
     from .device_model import V5E
     from .driver import get_driver, registry
@@ -329,44 +338,50 @@ def precompile_plans(
     store = default_cache() if cache else None
     summary: dict[str, Any] = {"compiled": [], "loaded": [], "skipped": [],
                                "entries": 0}
-    for kernel, axes in envelopes.items():
-        driver = get_driver(kernel, hw=hw)
-        if driver is None:
-            summary["skipped"].append(kernel)
-            continue
-        key = plan_key(kernel, hw.name, axes, driver.tuning_version,
-                       driver.source_hash)
-        plan = None
-        if store is not None:
-            entry = store.get_plan(kernel, key)
-            if entry is not None:
-                try:
-                    plan = LaunchPlanTable.from_json(entry.plan)
-                    summary["loaded"].append(kernel)
-                except (KeyError, ValueError, TypeError):
-                    plan = None
-        if plan is None:
-            plan = compile_plan(driver, lattice(axes), margin=margin)
-            summary["compiled"].append(kernel)
+    with trace_span("precompile_plans", n_kernels=len(envelopes)) as sp:
+        for kernel, axes in envelopes.items():
+            driver = get_driver(kernel, hw=hw)
+            if driver is None:
+                summary["skipped"].append(kernel)
+                continue
+            key = plan_key(kernel, hw.name, axes, driver.tuning_version,
+                           driver.source_hash)
+            plan = None
             if store is not None:
-                # Persistence is best-effort: an unwritable cache dir
-                # (read-only serving node) keeps the compiled plan serving
-                # this process, it just does not share it with the fleet.
-                global _plan_write_warned
-                try:
-                    store.put_plan(PlanEntry(
-                        kernel=kernel, key=key, hw_name=hw.name,
-                        plan=plan.to_json(), created_at=time.time(),
-                        tuning_version=driver.tuning_version))
-                except OSError as e:
-                    if not _plan_write_warned:
-                        _plan_write_warned = True
-                        logger.warning(
-                            "launch-plan artifact write failed (%s) for "
-                            "kernel %s; plans will not persist -- every "
-                            "process recompiles its envelope (set "
-                            "KLARAPTOR_CACHE_DIR to a writable path)",
-                            e, kernel)
-        registry.register_plan(plan)
-        summary["entries"] += len(plan)
+                entry = store.get_plan(kernel, key)
+                if entry is not None:
+                    try:
+                        plan = LaunchPlanTable.from_json(entry.plan)
+                        summary["loaded"].append(kernel)
+                    except (KeyError, ValueError, TypeError):
+                        plan = None
+            if plan is None:
+                plan = compile_plan(driver, lattice(axes), margin=margin)
+                summary["compiled"].append(kernel)
+                if store is not None:
+                    # Persistence is best-effort: an unwritable cache dir
+                    # (read-only serving node) keeps the compiled plan
+                    # serving this process, it just does not share it with
+                    # the fleet.
+                    global _plan_write_warned
+                    try:
+                        store.put_plan(PlanEntry(
+                            kernel=kernel, key=key, hw_name=hw.name,
+                            plan=plan.to_json(), created_at=time.time(),
+                            tuning_version=driver.tuning_version))
+                    except OSError as e:
+                        if not _plan_write_warned:
+                            _plan_write_warned = True
+                            logger.warning(
+                                "launch-plan artifact write failed (%s) for "
+                                "kernel %s; plans will not persist -- every "
+                                "process recompiles its envelope (set "
+                                "KLARAPTOR_CACHE_DIR to a writable path)",
+                                e, kernel)
+            registry.register_plan(plan)
+            summary["entries"] += len(plan)
+        sp.set(compiled=len(summary["compiled"]),
+               loaded=len(summary["loaded"]),
+               skipped=len(summary["skipped"]),
+               entries=summary["entries"])
     return summary

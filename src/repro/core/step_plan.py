@@ -116,8 +116,19 @@ def build_step_plan(requests: Iterable[KernelRequest],
     concurrent mutation lands mid-build, the plan is born stale and
     ``resolve`` correctly refuses to serve it.
     """
+    from repro.trace import trace_span
+
     generation = registry.generation
     reqs = list(requests)
+    span = trace_span("build_step_plan", n_requests=len(reqs))
+    with span:
+        plan = _build_step_plan(reqs, hw, generation)
+        span.set(entries=len(plan.table), generation=plan.generation)
+    return plan
+
+
+def _build_step_plan(reqs: list, hw: HardwareParams,
+                     generation: int) -> StepPlan:
     table: dict = {}
     sources: dict = {}
     # Group driver-undecided requests per kernel for the batched sweep.

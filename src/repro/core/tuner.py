@@ -29,6 +29,8 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from repro.trace import trace_span
+
 from .cache import CacheEntry, DriverCache, cache_key, default_cache
 from .codegen import generate_driver_source
 from .collect import CollectedData, collect
@@ -156,56 +158,67 @@ class Klaraptor:
         }
         key = cache_key(spec, self.hw, hyper) if self.cache else None
 
-        if self.cache is not None and use_cache and key is not None:
-            entry = self.cache.get(spec.name, key)
-            if entry is not None:
-                driver = DriverProgram.from_source(
-                    spec.name, entry.source, self.hw,
-                    tuning_version=entry.tuning_version)
-                if register:
-                    register_driver(driver)
-                return BuildResult(
-                    driver=driver,
-                    fits=_fits_from_json(entry.fits),
-                    collected=CollectedData.empty(spec, **entry.stats),
-                    build_wall_seconds=time.perf_counter() - t0,
-                    probe_device_seconds=0.0,
-                    from_cache=True,
-                )
+        with trace_span("build_driver", kernel=spec.name) as bsp:
+            if self.cache is not None and use_cache and key is not None:
+                entry = self.cache.get(spec.name, key)
+                if entry is not None:
+                    driver = DriverProgram.from_source(
+                        spec.name, entry.source, self.hw,
+                        tuning_version=entry.tuning_version)
+                    if register:
+                        register_driver(driver)
+                    bsp.set(from_cache=True)
+                    return BuildResult(
+                        driver=driver,
+                        fits=_fits_from_json(entry.fits),
+                        collected=CollectedData.empty(spec, **entry.stats),
+                        build_wall_seconds=time.perf_counter() - t0,
+                        probe_device_seconds=0.0,
+                        from_cache=True,
+                    )
 
-        data = collect(
-            spec, self.device,
-            probe_data=probe_data, hw=self.hw, repeats=repeats,
-            max_configs_per_size=max_configs_per_size, seed=seed,
-            strategy=strategy, budget=budget,
-        )
-        fits: dict[str, FitResult] = {}
-        for metric in LOW_LEVEL_METRICS:
-            vars_ = spec.metric_fit_vars(metric)
-            X, y = data.matrix(metric, vars_)
-            fits[metric] = fit_auto(
-                X, y, vars_,
-                max_num_degree=max_num_degree,
-                max_den_degree=max_den_degree,
+            data = collect(
+                spec, self.device,
+                probe_data=probe_data, hw=self.hw, repeats=repeats,
+                max_configs_per_size=max_configs_per_size, seed=seed,
+                strategy=strategy, budget=budget,
             )
-        program = build_time_program(
-            spec, {m: f.function for m, f in fits.items()}, self.hw)
-        source = generate_driver_source(
-            spec, program, {m: f.function for m, f in fits.items()}, self.hw)
-        driver = DriverProgram.from_source(spec.name, source, self.hw,
-                                           tuning_version=cache_version)
-        if register:
-            register_driver(driver)
-        if self.cache is not None and key is not None:
-            self._cache_put(spec, key, source, fits, data,
-                            tuning_version=cache_version)
-        return BuildResult(
-            driver=driver,
-            fits=fits,
-            collected=data,
-            build_wall_seconds=time.perf_counter() - t0,
-            probe_device_seconds=data.probe_device_seconds,
-        )
+            fits: dict[str, FitResult] = {}
+            with trace_span("fit", kernel=spec.name,
+                            n_samples=len(data)) as fsp:
+                for metric in LOW_LEVEL_METRICS:
+                    vars_ = spec.metric_fit_vars(metric)
+                    X, y = data.matrix(metric, vars_)
+                    fits[metric] = fit_auto(
+                        X, y, vars_,
+                        max_num_degree=max_num_degree,
+                        max_den_degree=max_den_degree,
+                    )
+                fsp.set(rel_error={m: round(f.rel_error, 6)
+                                   for m, f in fits.items()})
+            with trace_span("codegen", kernel=spec.name):
+                program = build_time_program(
+                    spec, {m: f.function for m, f in fits.items()}, self.hw)
+                source = generate_driver_source(
+                    spec, program,
+                    {m: f.function for m, f in fits.items()}, self.hw)
+                driver = DriverProgram.from_source(
+                    spec.name, source, self.hw,
+                    tuning_version=cache_version)
+            if register:
+                register_driver(driver)
+            if self.cache is not None and key is not None:
+                self._cache_put(spec, key, source, fits, data,
+                                tuning_version=cache_version)
+            bsp.set(from_cache=False,
+                    probe_device_seconds=data.probe_device_seconds)
+            return BuildResult(
+                driver=driver,
+                fits=fits,
+                collected=data,
+                build_wall_seconds=time.perf_counter() - t0,
+                probe_device_seconds=data.probe_device_seconds,
+            )
 
     # One-time flag for the best-effort cache-write warning (class-wide: a
     # read-only serving node should log the diagnosis once, not per build).

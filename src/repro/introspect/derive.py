@@ -215,36 +215,44 @@ def spec_from_kernel(fn, grid_spec: GridSpec, *,
     (granularities on TPU are fixed at 8 x 128) but is threaded through for
     API symmetry with the rest of the pipeline.
     """
-    (D1, P1), (D2, P2) = trace_points(grid_spec)
-    cap1 = capture_kernel(fn, grid_spec, D1, P1)
-    cap2 = capture_kernel(fn, grid_spec, D2, P2)
-    axes = _match_grid(grid_spec, cap1, cap2, D1, P1, D2, P2)
-    operands = _match_operands(grid_spec, cap1, cap2, axes, D1, P1, D2, P2)
-    # One cost walk per capture, shared by the FLOP and constraint passes.
-    cost1, cost2 = body_cost(cap1.body), body_cost(cap2.body)
-    flops, mxu = _derive_flops(grid_spec, cost1, cost2, axes, P1, P2)
-    constraints = _derive_constraints(grid_spec, axes, cap1, cap2,
-                                      cost1, cost2, P1, P2)
-    spec = KernelSpec(
-        name=grid_spec.name,
-        data_params=tuple(grid_spec.data_params),
-        program_params=tuple(grid_spec.program_params),
-        grid=axes,
-        operands=operands,
-        flops_per_point=flops,
-        constraints=constraints,
-        mxu_fraction=mxu,
-        param_candidates=dict(grid_spec.param_candidates),
-        pipeline_buffers=grid_spec.pipeline_buffers,
-        fit_vars=dict(grid_spec.fit_vars),
-        probe_hints=dict(grid_spec.probe_hints),
-        source_fingerprint=cap1.fingerprint,
-    )
-    # Self-check: the symbolic grid must reproduce both traced grids exactly.
-    for D, P, cap in ((D1, P1, cap1), (D2, P2, cap2)):
-        got = spec.grid_extents(D, P)
-        if got != cap.grid:
-            raise IntrospectError(
-                f"{grid_spec.name}: derived grid {got} does not reproduce "
-                f"the traced grid {cap.grid} at D={dict(D)} P={dict(P)}")
+    from repro.trace import trace_span
+
+    with trace_span("spec_from_kernel", kernel=grid_spec.name) as sp:
+        (D1, P1), (D2, P2) = trace_points(grid_spec)
+        cap1 = capture_kernel(fn, grid_spec, D1, P1)
+        cap2 = capture_kernel(fn, grid_spec, D2, P2)
+        axes = _match_grid(grid_spec, cap1, cap2, D1, P1, D2, P2)
+        operands = _match_operands(grid_spec, cap1, cap2, axes,
+                                   D1, P1, D2, P2)
+        # One cost walk per capture, shared by the FLOP and constraint
+        # passes.
+        cost1, cost2 = body_cost(cap1.body), body_cost(cap2.body)
+        flops, mxu = _derive_flops(grid_spec, cost1, cost2, axes, P1, P2)
+        constraints = _derive_constraints(grid_spec, axes, cap1, cap2,
+                                          cost1, cost2, P1, P2)
+        spec = KernelSpec(
+            name=grid_spec.name,
+            data_params=tuple(grid_spec.data_params),
+            program_params=tuple(grid_spec.program_params),
+            grid=axes,
+            operands=operands,
+            flops_per_point=flops,
+            constraints=constraints,
+            mxu_fraction=mxu,
+            param_candidates=dict(grid_spec.param_candidates),
+            pipeline_buffers=grid_spec.pipeline_buffers,
+            fit_vars=dict(grid_spec.fit_vars),
+            probe_hints=dict(grid_spec.probe_hints),
+            source_fingerprint=cap1.fingerprint,
+        )
+        # Self-check: the symbolic grid must reproduce both traced grids
+        # exactly.
+        for D, P, cap in ((D1, P1, cap1), (D2, P2, cap2)):
+            got = spec.grid_extents(D, P)
+            if got != cap.grid:
+                raise IntrospectError(
+                    f"{grid_spec.name}: derived grid {got} does not "
+                    f"reproduce the traced grid {cap.grid} at D={dict(D)} "
+                    f"P={dict(P)}")
+        sp.set(fingerprint=cap1.fingerprint, n_operands=len(operands))
     return spec

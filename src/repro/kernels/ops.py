@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core.driver import choose_or_default, fit_tile as _fit_tile
 from repro.core.step_plan import active_step_plan
+from repro.trace import trace_span
 
 from . import ref
 from .flash_attention import flash_attention_pallas
@@ -72,7 +73,10 @@ def _resolve(kernel: str, D: dict, default: dict, plan) -> dict:
         cfg = plan.resolve(kernel, D)
         if cfg is not None:
             return cfg
-    return choose_or_default(kernel, D, default)
+    # Only the fall-through is traced: dispatch happens at trace time (once
+    # per distinct shape), and the plan-hit path above must stay span-free.
+    with trace_span("dispatch.choose", kernel=kernel):
+        return choose_or_default(kernel, D, default)
 
 
 @functools.lru_cache(maxsize=128)

@@ -14,6 +14,12 @@ plans over a default batch x seq traffic envelope for every warm-started
 tier-1 kernel (one batched ``choose_many`` pass each, persisted through
 the artifact cache), making steady-state dispatch an O(1) plan-table
 probe.
+
+``--trace out.json`` installs a repro.trace Tracer for the whole run and
+writes a Chrome trace-event file at exit (open in ui.perfetto.dev);
+``--ledger run.jsonl`` appends the flight ledger (choices, probes, drift,
+refits -- implies --telemetry) for later replay with
+``python -m repro.launch.status --ledger run.jsonl``.
 """
 
 from __future__ import annotations
@@ -75,22 +81,25 @@ def build_auto_kernels(d_model: int = 1024, tune_device=None):
     return kernels
 
 
-def build_telemetry(seed: int = 0, auto_kernels=()):
+def build_telemetry(seed: int = 0, auto_kernels=(), ledger=None):
     """Default serving telemetry: tier-1 kernel specs over the v5e oracle
-    (plus any introspected auto-kernel specs)."""
+    (plus any introspected auto-kernel specs).  ``ledger`` (path or
+    repro.trace.Ledger) additionally appends every choice/probe/drift/refit
+    to the JSONL flight ledger."""
     from repro.core import (V5eSimulator, flash_attention_spec, matmul_spec,
                             moe_gmm_spec, ssd_scan_spec)
     from repro.telemetry import Telemetry
 
     specs = [matmul_spec(), flash_attention_spec(), moe_gmm_spec(),
              ssd_scan_spec()] + [ak.spec for ak in auto_kernels]
-    return Telemetry(specs, V5eSimulator(seed=seed), seed=seed)
+    return Telemetry(specs, V5eSimulator(seed=seed), seed=seed,
+                     ledger=ledger)
 
 
 def build_engine(cfg, batch: int, max_seq: int, mesh=None, params=None,
                  seed: int = 0, telemetry=None,
                  plan_envelope=None, auto_kernels=None,
-                 step_plans: bool = True) -> ServingEngine:
+                 step_plans: bool = True, trace=None) -> ServingEngine:
     model = Model(cfg)
     sharder = Sharder(mesh=mesh, rules=decode_rules())
     if params is None:
@@ -99,7 +108,7 @@ def build_engine(cfg, batch: int, max_seq: int, mesh=None, params=None,
                          max_seq=max_seq, telemetry=telemetry,
                          plan_envelope=plan_envelope,
                          auto_kernels=auto_kernels,
-                         step_plans=step_plans)
+                         step_plans=step_plans, trace=trace)
 
 
 def main() -> None:
@@ -128,9 +137,27 @@ def main() -> None:
                          "(layernorm fusion, blocked column reduction) and "
                          "serve them through the engine: zero hand-written "
                          "spec code")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record structured spans for the whole run and "
+                         "write a Chrome trace-event JSON here (open in "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--ledger", metavar="PATH", default=None,
+                    help="append the JSONL flight ledger (choices, probes, "
+                         "drift, refits) here; implies --telemetry; replay "
+                         "with python -m repro.launch.status --ledger PATH")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    ledger = None
+    if args.ledger:
+        from repro.trace import Ledger
+        ledger = Ledger(args.ledger)
+    tracer = None
+    if args.trace:
+        from repro.trace import Tracer
+        # The tracer shares the flight ledger, so completed spans persist
+        # alongside choices/probes/drift/refits.
+        tracer = Tracer(ledger=ledger)
     auto = []
     if args.auto_kernels:
         from repro.core import V5eSimulator
@@ -142,13 +169,13 @@ def main() -> None:
                   f"grid rank {len(ak.spec.grid)}, "
                   f"constraints {list(ak.spec.constraints)}, "
                   f"kernel hash {ak.spec.source_fingerprint}")
-    telemetry = (build_telemetry(auto_kernels=auto)
-                 if args.telemetry else None)
+    telemetry = (build_telemetry(auto_kernels=auto, ledger=ledger)
+                 if args.telemetry or ledger is not None else None)
     envelope = (default_plan_envelope(args.batch, args.max_seq)
                 if args.plans else None)
     engine = build_engine(cfg, args.batch, args.max_seq, telemetry=telemetry,
                           plan_envelope=envelope, auto_kernels=auto,
-                          step_plans=not args.no_step_plans)
+                          step_plans=not args.no_step_plans, trace=tracer)
     ws = engine.warm_started
     print(f"warm start: {len(ws)} driver(s) loaded {list(ws)}, "
           f"{len(ws.plans_loaded)} plan(s), "
@@ -177,9 +204,19 @@ def main() -> None:
             with open(args.telemetry_json, "w") as f:
                 f.write(telemetry.exporter.json())
             print(f"telemetry snapshot written to {args.telemetry_json}")
-        else:
+        elif args.telemetry:
             print(telemetry.prometheus(), end="")
         telemetry.uninstall()
+    if tracer is not None:
+        n = tracer.write_chrome_trace(args.trace)
+        tracer.uninstall()
+        print(f"trace: {n} spans written to {args.trace} "
+              f"(open in ui.perfetto.dev)")
+    if ledger is not None:
+        ledger.close()
+        print(f"flight ledger: {ledger.n_written} events appended to "
+              f"{args.ledger}; render with "
+              f"python -m repro.launch.status --ledger {args.ledger}")
 
 
 if __name__ == "__main__":

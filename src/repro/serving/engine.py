@@ -54,6 +54,7 @@ import numpy as np
 from repro.core.device_model import V5E
 from repro.core.driver import choose_or_default, warm_start_from_cache
 from repro.serving.sampling import greedy, sample
+from repro.trace import trace_span, tracing
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -72,7 +73,7 @@ class ServingEngine:
     def __init__(self, model, params, sharder, batch: int, max_seq: int,
                  eos_id: int = 1, seed: int = 0, warm_start: bool = True,
                  telemetry=None, plan_envelope=None, auto_kernels=None,
-                 step_plans: bool = True):
+                 step_plans: bool = True, trace=None):
         self.model = model
         self.params = params
         self.sharder = sharder
@@ -80,6 +81,14 @@ class ServingEngine:
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
+        # Opt-in structured tracing (repro.trace.Tracer): installed as the
+        # process-wide tracer before warm start / plan precompilation so
+        # the whole engine bring-up lands in the flight recorder.  Same
+        # sharing contract as telemetry below: one process-wide slot, the
+        # caller decides which tracer wins.
+        self.tracer = trace
+        if trace is not None:
+            trace.install()
         # Opt-in runtime observability (repro.telemetry.Telemetry): installed
         # as the process-wide choice listener before any launch decision so
         # every choose_or_default this engine triggers is recorded, shadow-
@@ -201,15 +210,28 @@ class ServingEngine:
         """One jitted step under the active step plan (rebuilt first if the
         registry generation moved -- the rebuild re-resolves against the
         new state, so a fresh override or refit takes effect on the very
-        next trace)."""
-        if self._step_plan is None:
-            return self._step(self.params, tok, ps, self.cache)
-        if self._step_plan.stale():
-            self._refresh_step_plan()
-        from repro.core.step_plan import use_step_plan
+        next trace).
 
-        with use_step_plan(self._step_plan):
-            return self._step(self.params, tok, ps, self.cache)
+        When a tracer is installed, the step is wrapped in an
+        ``engine.step`` span and the output is blocked on before the span
+        closes, so device time is attributed to the step that spent it,
+        not just the async dispatch.  With no tracer, dispatch stays
+        async and span-free.
+        """
+        if self._step_plan is not None and self._step_plan.stale():
+            self._refresh_step_plan()
+        with trace_span("engine.step",
+                        step_plan=self._step_plan is not None):
+            if self._step_plan is None:
+                out = self._step(self.params, tok, ps, self.cache)
+            else:
+                from repro.core.step_plan import use_step_plan
+
+                with use_step_plan(self._step_plan):
+                    out = self._step(self.params, tok, ps, self.cache)
+            if tracing():
+                out = jax.block_until_ready(out)
+        return out
 
     def _fill_slots(self) -> None:
         for s in range(self.batch):
@@ -217,8 +239,10 @@ class ServingEngine:
                 continue
             req = self.pending.pop(0)
             # prefill the prompt through the shared decode step
-            for t_idx, tok in enumerate(req.prompt[:-1]):
-                self._single(s, tok, t_idx)
+            with trace_span("engine.prefill", rid=req.rid,
+                            tokens=len(req.prompt) - 1):
+                for t_idx, tok in enumerate(req.prompt[:-1]):
+                    self._single(s, tok, t_idx)
             self.slot_req[s] = req
             self.slot_pos[s] = len(req.prompt) - 1
             self.slot_last[s] = req.prompt[-1]
@@ -235,24 +259,25 @@ class ServingEngine:
         active = [s for s in range(self.batch) if self.slot_req[s] is not None]
         if not active:
             return
-        logits, self.cache = self._run_step(
-            jnp.asarray(self.slot_last), jnp.asarray(self.slot_pos))
-        self.key, sub = jax.random.split(self.key)
-        temps = {r.temperature for s, r in enumerate(self.slot_req)
-                 if r is not None}
-        greedy_tok = np.asarray(greedy(logits))
-        sampled_tok = np.asarray(sample(logits, sub, temperature=max(
-            temps | {1.0})))
-        for s in active:
-            req = self.slot_req[s]
-            nxt = int(greedy_tok[s] if req.temperature <= 0.0
-                      else sampled_tok[s])
-            req.output.append(nxt)
-            self.slot_pos[s] += 1
-            self.slot_last[s] = nxt
-            self.slot_budget[s] -= 1
-            if (nxt == self.eos_id or self.slot_budget[s] <= 0
-                    or self.slot_pos[s] >= self.max_seq - 1):
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[s] = None   # slot freed: continuous batching
+        with trace_span("engine.decode", active=len(active)):
+            logits, self.cache = self._run_step(
+                jnp.asarray(self.slot_last), jnp.asarray(self.slot_pos))
+            self.key, sub = jax.random.split(self.key)
+            temps = {r.temperature for s, r in enumerate(self.slot_req)
+                     if r is not None}
+            greedy_tok = np.asarray(greedy(logits))
+            sampled_tok = np.asarray(sample(logits, sub, temperature=max(
+                temps | {1.0})))
+            for s in active:
+                req = self.slot_req[s]
+                nxt = int(greedy_tok[s] if req.temperature <= 0.0
+                          else sampled_tok[s])
+                req.output.append(nxt)
+                self.slot_pos[s] += 1
+                self.slot_last[s] = nxt
+                self.slot_budget[s] -= 1
+                if (nxt == self.eos_id or self.slot_budget[s] <= 0
+                        or self.slot_pos[s] >= self.max_seq - 1):
+                    req.done = True
+                    self.finished.append(req)
+                    self.slot_req[s] = None  # slot freed: continuous batching

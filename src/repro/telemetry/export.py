@@ -38,10 +38,23 @@ import json
 from dataclasses import dataclass, field
 
 from repro.core.driver import registry
+from repro.trace import HISTOGRAM_BOUNDS_S, get_tracer
 
 from .record import bucket_label
 
 __all__ = ["MetricsExporter", "TelemetryCounters"]
+
+
+def _escape_label(value) -> str:
+    """Escape a label value per the Prometheus text exposition format.
+
+    Inside double-quoted label values, backslash, double-quote and
+    newline must be escaped (in that order -- backslash first, or the
+    escapes themselves get re-escaped).  Without this, a kernel or hw
+    name containing ``"`` or ``\\`` produced an unparseable line.
+    """
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
 
 
 @dataclass
@@ -89,6 +102,14 @@ class MetricsExporter:
             "plan_misses": reg.get("plan_misses", 0),
             "choose_many_calls": reg.get("choose_many_calls", 0),
             "choose_many_rows": reg.get("choose_many_rows", 0),
+            "plan_invalidations": reg.get("plan_invalidations", 0),
+            "memo_invalidations": reg.get("memo_invalidations", 0),
+        }
+        # Gauges: point-in-time registry state (hot-swap churn visibility),
+        # as opposed to the monotonic counters above.
+        gauges = {
+            "registry_generation": registry.generation,
+            "decision_memo_entries": registry.memo_size(),
         }
         keys = [{
             "kernel": s.kernel,
@@ -114,19 +135,29 @@ class MetricsExporter:
             "total_executions": r.total_executions,
             "error": r.error,
         } for r in t.refits]
-        return {
+        out = {
             "config": t.config.fingerprint(),
             "counters": counters,
+            "gauges": gauges,
             "keys": keys,
             "refits": refits,
         }
+        # Span summaries join the snapshot only when a tracer is installed
+        # -- exports without one stay byte-identical to pre-trace output
+        # modulo the new counter/gauge keys (and stay deterministic: span
+        # totals only move when spans complete, not when snapshots happen).
+        tracer = get_tracer()
+        if tracer is not None:
+            out["spans"] = tracer.summary()
+        return out
 
     def json(self, indent: int | None = 2) -> str:
         return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
 
     # -- Prometheus text -----------------------------------------------------
     def prometheus(self, prefix: str = "klaraptor") -> str:
-        """Prometheus exposition-format text (counters + per-key gauges)."""
+        """Prometheus exposition-format text: counters, gauges, and (when a
+        tracer is installed) span-duration histograms."""
         snap = self.snapshot()
         c = snap["counters"]
         lines: list[str] = []
@@ -136,7 +167,8 @@ class MetricsExporter:
 
         lines.append(f"# TYPE {prefix}_choices_total counter")
         for source, n in c["choices_by_source"].items():
-            counter("choices_total", n, f'{{source="{source}"}}')
+            counter("choices_total", n,
+                    f'{{source="{_escape_label(source)}"}}')
         for name in ("fallback_default_total", "shadow_probes_total",
                      "probe_device_seconds_total", "drift_events_total",
                      "refits_total", "refit_failures_total",
@@ -144,15 +176,20 @@ class MetricsExporter:
                      "disk_cache_hits", "disk_cache_misses",
                      "plan_hits", "plan_misses",
                      "choose_many_calls", "choose_many_rows",
+                     "plan_invalidations", "memo_invalidations",
                      "warm_started_kernels"):
             lines.append(f"# TYPE {prefix}_{name} counter")
             counter(name, c[name])
+        for name, value in snap["gauges"].items():
+            lines.append(f"# TYPE {prefix}_{name} gauge")
+            lines.append(f"{prefix}_{name} {value}")
         lines.append(f"# TYPE {prefix}_rel_error_ewma gauge")
         lines.append(f"# TYPE {prefix}_key_choices_total counter")
         lines.append(f"# TYPE {prefix}_key_probes_total counter")
         for k in snap["keys"]:
-            labels = (f'{{kernel="{k["kernel"]}",hw="{k["hw"]}",'
-                      f'bucket="{k["bucket"]}"}}')
+            labels = (f'{{kernel="{_escape_label(k["kernel"])}",'
+                      f'hw="{_escape_label(k["hw"])}",'
+                      f'bucket="{_escape_label(k["bucket"])}"}}')
             if k["rel_error_ewma"] is not None:
                 lines.append(
                     f"{prefix}_rel_error_ewma{labels} "
@@ -161,4 +198,33 @@ class MetricsExporter:
                 f"{prefix}_key_choices_total{labels} {k['n_choices']}")
             lines.append(
                 f"{prefix}_key_probes_total{labels} {k['n_probes']}")
+        lines.extend(self._span_histogram_lines(prefix))
         return "\n".join(lines) + "\n"
+
+    @staticmethod
+    def _span_histogram_lines(prefix: str) -> list[str]:
+        """Span-duration histograms per the Prometheus histogram
+        convention: cumulative ``_bucket{le=...}`` series (including
+        ``+Inf``), plus ``_sum`` and ``_count``.  Empty with no tracer
+        installed."""
+        tracer = get_tracer()
+        if tracer is None:
+            return []
+        hists = tracer.histograms()
+        if not hists:
+            return []
+        metric = f"{prefix}_span_duration_seconds"
+        lines = [f"# TYPE {metric} histogram"]
+        for name in sorted(hists):
+            h = hists[name]
+            span = _escape_label(name)
+            cum = 0
+            for le, n in zip(HISTOGRAM_BOUNDS_S, h["counts"]):
+                cum += n
+                lines.append(
+                    f'{metric}_bucket{{span="{span}",le="{le:g}"}} {cum}')
+            cum += h["counts"][-1]
+            lines.append(f'{metric}_bucket{{span="{span}",le="+Inf"}} {cum}')
+            lines.append(f'{metric}_sum{{span="{span}"}} {h["sum_s"]:.9g}')
+            lines.append(f'{metric}_count{{span="{span}"}} {h["count"]}')
+        return lines

@@ -24,6 +24,7 @@ fleets that want the reaction on a side thread.
 
 from __future__ import annotations
 
+import os
 import threading
 from typing import Iterable, Mapping
 
@@ -34,11 +35,12 @@ from repro.core.device_model import DeviceModel, V5E
 from repro.core.driver import ChoiceEvent, set_choice_listener
 from repro.core.kernel_spec import CandidateTable, KernelSpec
 from repro.core.tuner import Klaraptor
+from repro.trace import Ledger, trace_span
 
 from .config import TelemetryConfig
 from .drift import DriftDetector, DriftEvent
 from .export import MetricsExporter, TelemetryCounters
-from .record import KeyStats, LaunchRecorder
+from .record import KeyStats, LaunchRecorder, bucket_label
 from .refit import RefitController, RefitResult
 
 __all__ = ["Telemetry"]
@@ -54,6 +56,12 @@ class Telemetry:
     refit controller uses; by default one is constructed over the same
     device/hw with the default artifact cache (pass ``cache=False`` to keep
     refits process-local).
+
+    ``ledger`` (optional; a ``repro.trace.Ledger`` or a path) turns on the
+    flight ledger: every choice event (already coalesced by the decision
+    memo, so steady-state writes stay rare), shadow probe, drift event and
+    refit outcome is appended as one JSONL line -- the persistent record of
+    what the system decided, predicted, and observed.
     """
 
     def __init__(self,
@@ -63,7 +71,8 @@ class Telemetry:
                  config: TelemetryConfig | None = None,
                  klaraptor: Klaraptor | None = None,
                  cache: DriverCache | None | bool = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 ledger: Ledger | str | os.PathLike | None = None):
         if not isinstance(specs, Mapping):
             specs = {s.name: s for s in specs}
         self.specs: dict[str, KernelSpec] = dict(specs)
@@ -83,6 +92,9 @@ class Telemetry:
         self._rng = np.random.RandomState(seed)
         self._lock = threading.RLock()
         self._reacting = False     # reentrancy guard: refits make choices too
+        if ledger is not None and not isinstance(ledger, Ledger):
+            ledger = Ledger(ledger)
+        self.ledger = ledger
 
     # -- lifecycle -----------------------------------------------------------
     def install(self) -> "Telemetry":
@@ -117,6 +129,16 @@ class Telemetry:
         # memo batches steady-state hits); counters account for all of
         # them, the shadow-probe sampling below sees one event.
         n = event.n_coalesced
+        if self.ledger is not None:
+            # One JSONL line per *event*, not per launch: the coalescing
+            # already happened upstream, so this inherits its write rate.
+            self.ledger.append({
+                "type": "choice", "kernel": event.kernel,
+                "hw": event.hw_name, "D": dict(event.D),
+                "config": dict(event.config), "source": event.source,
+                "predicted_s": event.predicted_s,
+                "n_coalesced": n, "t_ns": event.t_ns,
+            })
         with self._lock:
             c.choices_total += n
             c.choices_by_source[event.source] = \
@@ -139,18 +161,43 @@ class Telemetry:
                 self._reacting = False
 
     def _probe_and_react(self, event: ChoiceEvent, stats: KeyStats) -> None:
-        observed = self.shadow_probe(event.kernel, event.D, event.config)
-        if observed is None:
-            return
-        self.recorder.record_probe(stats, event.predicted_s, observed)
-        drift = self.detector.update(stats)
-        if drift is None:
-            return
-        with self._lock:
-            self.counters.drift_events_total += 1
-            self.drift_events.append(drift)
-        if self.config.refit_enabled:
-            self.refit_now(drift)
+        with trace_span("telemetry.observe", kernel=event.kernel,
+                        source=event.source) as sp:
+            observed = self.shadow_probe(event.kernel, event.D, event.config)
+            if observed is None:
+                return
+            self.recorder.record_probe(stats, event.predicted_s, observed)
+            if self.ledger is not None:
+                self.ledger.append({
+                    "type": "probe", "kernel": event.kernel,
+                    "hw": event.hw_name,
+                    "bucket": bucket_label(stats.bucket),
+                    "D": dict(event.D),
+                    "predicted_s": event.predicted_s,
+                    "observed_s": observed,
+                    "rel_error_ewma": stats.rel_error_ewma,
+                    "t_ns": event.t_ns,
+                })
+            drift = self.detector.update(stats)
+            if drift is None:
+                return
+            sp.set(drift=True, rel_error_ewma=drift.rel_error_ewma)
+            with self._lock:
+                self.counters.drift_events_total += 1
+                self.drift_events.append(drift)
+            if self.ledger is not None:
+                self.ledger.append({
+                    "type": "drift", "kernel": drift.kernel,
+                    "hw": drift.hw_name,
+                    "bucket": bucket_label(drift.bucket),
+                    "D": dict(drift.D), "config": dict(drift.config),
+                    "rel_error_ewma": drift.rel_error_ewma,
+                    "n_samples": drift.n_samples,
+                    "predicted_s": drift.predicted_s,
+                    "observed_s": drift.observed_s,
+                })
+            if self.config.refit_enabled:
+                self.refit_now(drift)
 
     def shadow_probe(self, kernel: str, D, config) -> float | None:
         """One sampled observability probe of the chosen config; observed
@@ -158,18 +205,20 @@ class Telemetry:
         spec = self.specs.get(kernel)
         if spec is None:
             return None
-        try:
-            one = CandidateTable.from_rows(spec.program_params, [config])
-            tt = spec.traffic_table(D, one, self.hw)
-            probe = self.device.probe_rows(tt, self._rng,
-                                           repeats=self.config.probe_repeats)
-        except Exception:
-            return None         # mismatched params / infeasible: not fatal
-        with self._lock:
-            self.counters.shadow_probes_total += 1
-            self.counters.probe_device_seconds_total += float(
-                np.sum(probe.device_seconds))
-        return float(probe.total_time_s[0])
+        with trace_span("telemetry.shadow_probe", kernel=kernel) as sp:
+            try:
+                one = CandidateTable.from_rows(spec.program_params, [config])
+                tt = spec.traffic_table(D, one, self.hw)
+                probe = self.device.probe_rows(
+                    tt, self._rng, repeats=self.config.probe_repeats)
+            except Exception:
+                return None     # mismatched params / infeasible: not fatal
+            device_s = float(np.sum(probe.device_seconds))
+            sp.set(device_seconds=device_s)
+            with self._lock:
+                self.counters.shadow_probes_total += 1
+                self.counters.probe_device_seconds_total += device_s
+            return float(probe.total_time_s[0])
 
     def refit_now(self, drift: DriftEvent) -> RefitResult | None:
         """Run the budget-capped refit reaction for one drift event."""
@@ -186,6 +235,18 @@ class Telemetry:
                 self.counters.overrides_total += 1
             self.counters.refit_device_seconds_total += \
                 result.total_device_seconds
+        if self.ledger is not None:
+            self.ledger.append({
+                "type": "refit", "kernel": result.kernel,
+                "D": dict(result.D), "succeeded": result.succeeded,
+                "cache_version": result.cache_version,
+                "override": (dict(result.override)
+                             if result.override is not None else None),
+                "total_device_seconds": result.total_device_seconds,
+                "total_executions": result.total_executions,
+                "wall_seconds": result.wall_seconds,
+                "error": result.error,
+            })
         # The swapped-in fit starts with a clean record: the old fit's
         # errors must not immediately re-condemn the new one.
         for s in self.recorder.keys():

@@ -34,6 +34,7 @@ from repro.core.driver import register_driver, registry
 from repro.core.kernel_spec import CandidateTable, KernelSpec
 from repro.core.tuner import Klaraptor
 from repro.search import SearchBudget, run_search
+from repro.trace import trace_span
 
 from .config import TelemetryConfig
 from .drift import DriftEvent
@@ -144,6 +145,20 @@ class RefitController:
 
     # -- the reaction --------------------------------------------------------
     def refit(self, spec: KernelSpec, drift: DriftEvent) -> RefitResult:
+        # One parent span for the whole reaction so the chain reads as a
+        # single causal tree in traces: refit -> search -> fit -> validate
+        # -> swap (nested under telemetry.observe when drift-triggered).
+        with trace_span("refit", kernel=spec.name,
+                        rel_error_ewma=drift.rel_error_ewma) as rsp:
+            result = self._refit_inner(spec, drift)
+            rsp.set(succeeded=result.succeeded,
+                    override=result.override is not None,
+                    device_seconds=result.total_device_seconds,
+                    error=result.error)
+            return result
+
+    def _refit_inner(self, spec: KernelSpec,
+                     drift: DriftEvent) -> RefitResult:
         t0 = time.perf_counter()
         total = self.config.refit_budget or self._default_budget(spec,
                                                                  drift.D)
@@ -154,55 +169,68 @@ class RefitController:
             cache_version=0, budget=total.fingerprint())
 
         # 1. direct search at the drifted live shape: measured evidence.
-        try:
-            sr = run_search(spec, self.kl.device, drift.D,
-                            strategy=self.config.refit_strategy,
-                            budget=search_b, hw=self.kl.hw, seed=self._seed)
-            result.searched_config = sr.best_config
-            result.search_device_seconds = sr.probe_device_seconds
-            result.search_executions = sr.n_probe_executions
-            best_observed_s = sr.best_observed_time_s
-        except ValueError as e:      # infeasible shape: nothing to correct
-            result.error = f"search: {e}"
-            result.wall_seconds = time.perf_counter() - t0
-            return result
+        with trace_span("refit.search", kernel=spec.name,
+                        D=dict(drift.D)) as sp:
+            try:
+                sr = run_search(spec, self.kl.device, drift.D,
+                                strategy=self.config.refit_strategy,
+                                budget=search_b, hw=self.kl.hw,
+                                seed=self._seed)
+                result.searched_config = sr.best_config
+                result.search_device_seconds = sr.probe_device_seconds
+                result.search_executions = sr.n_probe_executions
+                best_observed_s = sr.best_observed_time_s
+                sp.set(executions=sr.n_probe_executions,
+                       device_seconds=sr.probe_device_seconds)
+            except ValueError as e:   # infeasible shape: nothing to correct
+                result.error = f"search: {e}"
+                result.wall_seconds = time.perf_counter() - t0
+                return result
 
         # 2. re-fit on live traffic shapes; hot-swap only if the build lands.
         next_version = 0
         build = None
-        try:
-            if self.kl.cache is not None:
-                next_version = self.kl.cache.latest_version(
-                    spec.name, self.kl.hw.name) + 1
-            build = self.kl.build_driver(
-                spec,
-                probe_data=refit_probe_shapes(drift.D),
-                repeats=self.config.refit_repeats,
-                max_configs_per_size=self.config.refit_max_configs_per_size,
-                seed=self._seed,
-                register=False,
-                use_cache=False,
-                strategy=self.config.refit_strategy,
-                budget=fit_b,
-                cache_version=next_version,
-            )
-            result.fit_device_seconds = build.probe_device_seconds
-            result.fit_executions = build.collected.n_probe_executions
-        except Exception as e:
-            # Budget too small to collect a fittable dataset, degenerate
-            # probes, ...: keep the old driver serving; the search result
-            # still gives a measured per-shape correction below.
-            result.error = f"fit: {type(e).__name__}: {e}"
+        with trace_span("refit.fit", kernel=spec.name) as sp:
+            try:
+                if self.kl.cache is not None:
+                    next_version = self.kl.cache.latest_version(
+                        spec.name, self.kl.hw.name) + 1
+                build = self.kl.build_driver(
+                    spec,
+                    probe_data=refit_probe_shapes(drift.D),
+                    repeats=self.config.refit_repeats,
+                    max_configs_per_size=(
+                        self.config.refit_max_configs_per_size),
+                    seed=self._seed,
+                    register=False,
+                    use_cache=False,
+                    strategy=self.config.refit_strategy,
+                    budget=fit_b,
+                    cache_version=next_version,
+                )
+                result.fit_device_seconds = build.probe_device_seconds
+                result.fit_executions = build.collected.n_probe_executions
+                sp.set(executions=result.fit_executions,
+                       device_seconds=result.fit_device_seconds)
+            except Exception as e:
+                # Budget too small to collect a fittable dataset, degenerate
+                # probes, ...: keep the old driver serving; the search result
+                # still gives a measured per-shape correction below.
+                result.error = f"fit: {type(e).__name__}: {e}"
+                sp.set(error=result.error)
 
         # 3. validate: measured config vs (new) model choice at the shape.
         driver = build.driver if build is not None else None
-        if driver is not None:
-            try:
-                result.driver_config = driver.choose(drift.D)
-            except Exception:
-                result.driver_config = None
-        result.override = self._pick_override(
-            spec, drift.D, result, best_observed_s, val_b)
+        with trace_span("refit.validate", kernel=spec.name) as sp:
+            if driver is not None:
+                try:
+                    result.driver_config = driver.choose(drift.D)
+                except Exception:
+                    result.driver_config = None
+            result.override = self._pick_override(
+                spec, drift.D, result, best_observed_s, val_b)
+            sp.set(override=result.override is not None,
+                   executions=result.validation_executions)
 
         # Hot swap + write-through, atomically from the registry's view:
         # drop every memo describing the old fit, then install the new
@@ -211,18 +239,21 @@ class RefitController:
         # neither.  A failed re-fit swaps nothing: the old driver keeps
         # serving (a drifted fit beats no fit) with the measured override
         # patching the shape we have evidence for.
-        if driver is not None:
-            registry.invalidate_kernel(spec.name)
-            register_driver(driver)
-            result.succeeded = True
-            result.cache_version = next_version if self.kl.cache is not None \
-                else 0
-            if self.kl.cache is not None:
-                self.kl.cache.invalidate(spec.name, self.kl.hw.name,
-                                         below_version=next_version)
-        if result.override is not None:
-            registry.note_override(spec.name, self.kl.hw.name, drift.D,
-                                   result.override)
+        with trace_span("refit.swap", kernel=spec.name) as sp:
+            if driver is not None:
+                registry.invalidate_kernel(spec.name)
+                register_driver(driver)
+                result.succeeded = True
+                result.cache_version = next_version \
+                    if self.kl.cache is not None else 0
+                if self.kl.cache is not None:
+                    self.kl.cache.invalidate(spec.name, self.kl.hw.name,
+                                             below_version=next_version)
+            if result.override is not None:
+                registry.note_override(spec.name, self.kl.hw.name, drift.D,
+                                       result.override)
+            sp.set(swapped=driver is not None,
+                   cache_version=result.cache_version)
         result.wall_seconds = time.perf_counter() - t0
         return result
 

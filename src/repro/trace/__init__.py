@@ -1,0 +1,36 @@
+"""repro.trace: structured tracing, flight recorder, and timeline export.
+
+The observability layer for the tune->serve pipeline: ``trace_span``
+spans with thread-local nesting (zero-cost when no ``Tracer`` is
+installed), a bounded flight-recorder ring with per-name duration
+histograms, an append-only JSONL ``Ledger`` of decisions / probes /
+drift / refits / spans, and Chrome trace-event export for Perfetto.
+
+Intentionally stdlib-only and imported from nothing inside ``repro``,
+so every layer (core, introspect, telemetry, serving, launch) can
+instrument itself without import cycles.
+"""
+
+from .chrome import chrome_trace, write_chrome_trace
+from .ledger import Ledger, ledger_summary, read_ledger
+from .span import (HISTOGRAM_BOUNDS_S, NULL_SPAN, Span, SpanHistogram,
+                   Tracer, get_tracer, set_tracer, trace_span, traced,
+                   tracing)
+
+__all__ = [
+    "HISTOGRAM_BOUNDS_S",
+    "Ledger",
+    "NULL_SPAN",
+    "Span",
+    "SpanHistogram",
+    "Tracer",
+    "chrome_trace",
+    "get_tracer",
+    "ledger_summary",
+    "read_ledger",
+    "set_tracer",
+    "trace_span",
+    "traced",
+    "tracing",
+    "write_chrome_trace",
+]

@@ -1,0 +1,141 @@
+"""The flight ledger: an append-only JSONL record of everything decided.
+
+Where the span ring (``repro.trace.span``) answers "where did time go in
+this process", the ledger answers "what did the system decide, predict and
+observe -- ever".  One JSON object per line, ``type``-tagged:
+
+  ``choice``  one (possibly coalesced) launch decision (from ChoiceEvents)
+  ``probe``   a shadow probe: predicted vs observed seconds, rel-error EWMA
+  ``drift``   a DriftDetector trip
+  ``refit``   a RefitController outcome (search/fit/validate/swap)
+  ``span``    a completed tracing span (when a Tracer carries the ledger)
+
+Steady-state write volume inherits the driver's coalescing accounting: a
+memo-hit storm writes one ``choice`` line per coalescing window, not one
+per launch.  ``read_ledger`` + ``ledger_summary`` are the query side, used
+by ``python -m repro.launch.status``.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+
+__all__ = ["Ledger", "ledger_summary", "read_ledger"]
+
+
+class Ledger:
+    """Append-only JSONL event sink; thread-safe; flushes every line.
+
+    Opened in append mode by default so successive runs accumulate into
+    one auditable history; pass ``mode="w"`` to truncate.
+    """
+
+    def __init__(self, path, mode: str = "a"):
+        self.path = str(path)
+        self._f = open(self.path, mode)
+        self._lock = threading.Lock()
+        self.n_written = 0
+
+    def append(self, event: dict) -> None:
+        line = json.dumps(event, sort_keys=True, separators=(",", ":"),
+                          default=str)
+        with self._lock:
+            self._f.write(line)
+            self._f.write("\n")
+            self._f.flush()
+            self.n_written += 1
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+    def __enter__(self) -> "Ledger":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_ledger(path) -> list[dict]:
+    """Parse a JSONL ledger back into event dicts.
+
+    A torn final line (process killed mid-write) is skipped rather than
+    poisoning the whole read; a malformed line anywhere else raises.
+    """
+    events: list[dict] = []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                break
+            raise
+    return events
+
+
+def ledger_summary(events: list[dict]) -> dict:
+    """Aggregate ledger events into the status-dashboard shape.
+
+    Coalesced choice events count with their ``n_coalesced`` weight, so
+    launch totals match what the telemetry exporter would have counted
+    live.  Rel-error rows keep the *last* EWMA per key (it is already a
+    running average).
+    """
+    by_type: dict[str, int] = {}
+    kernels: dict[str, dict] = {}
+    rel_error: dict[str, dict] = {}
+    spans: dict[str, dict] = {}
+    drift_events: list[dict] = []
+    refits: list[dict] = []
+    choices_total = 0
+    choice_lines = 0
+
+    for ev in events:
+        kind = ev.get("type", "?")
+        by_type[kind] = by_type.get(kind, 0) + 1
+        if kind == "choice":
+            n = int(ev.get("n_coalesced", 1))
+            choices_total += n
+            choice_lines += 1
+            k = kernels.setdefault(ev.get("kernel", "?"),
+                                   {"launches": 0, "by_source": {}})
+            k["launches"] += n
+            src = ev.get("source", "?")
+            k["by_source"][src] = k["by_source"].get(src, 0) + n
+        elif kind == "probe":
+            key = "{} {} {}".format(ev.get("kernel", "?"), ev.get("hw", "?"),
+                                    ev.get("bucket", "?"))
+            row = rel_error.setdefault(key, {"probes": 0, "rel_error_ewma": 0.0})
+            row["probes"] += 1
+            if ev.get("rel_error_ewma") is not None:
+                row["rel_error_ewma"] = ev["rel_error_ewma"]
+        elif kind == "drift":
+            drift_events.append(ev)
+        elif kind == "refit":
+            refits.append(ev)
+        elif kind == "span":
+            row = spans.setdefault(ev.get("name", "?"),
+                                   {"count": 0, "total_s": 0.0, "max_s": 0.0})
+            row["count"] += 1
+            dur = float(ev.get("dur_s", 0.0))
+            row["total_s"] += dur
+            if dur > row["max_s"]:
+                row["max_s"] = dur
+
+    return {
+        "n_events": len(events),
+        "by_type": by_type,
+        "choices_total": choices_total,
+        "choice_lines": choice_lines,
+        "kernels": kernels,
+        "rel_error": rel_error,
+        "drift_events": drift_events,
+        "refits": refits,
+        "spans": spans,
+    }

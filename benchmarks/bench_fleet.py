@@ -1,0 +1,316 @@
+"""Fleet benchmark: farm speedup, fault recovery, and the retune pipeline.
+
+The probe oracle is wrapped in ``WallClockSim`` so probe calls *take*
+wall-clock time proportional to the device-seconds they simulate (the
+stand-in for real hardware, where probing is the expensive step).  The
+scale is calibrated from a fast no-sleep collect so the single-process
+reference lands near a fixed wall target regardless of host speed --
+throttled runners shift both sides of every ratio together.
+
+Stages (each a gate under ``--smoke``):
+
+  * **speedup** -- the same tune run single-process vs a 4-worker thread
+    farm; gate: >= 2x wall-clock speedup AND the farm's merged dataset /
+    driver choice / cache artifacts bit-identical to the single-process
+    build (parity is checked against a no-sleep collect: ``WallClockSim``
+    only adds time, never changes bytes);
+  * **fault recovery** -- the same farm on the process backend with one
+    worker killed mid-job (os._exit holding its lease) and one hung past
+    its lease (stops heartbeating, wakes later into a duplicate
+    completion); gate: both faults observed, recovered, and the output
+    still bit-identical;
+  * **duplicate drop** -- one job explicitly speculated and executed
+    twice; gate: both executions byte-identical, second result dropped;
+  * **retune** -- a drift line in a serving flight ledger, ingested by the
+    durable queue, re-probed and refitted farm-side; gate: refit
+    succeeded, a bumped-version artifact written through the shared
+    cache, the coordinator process registry untouched.
+
+Writes ``BENCH_fleet.json`` (schema ``version: 1``) next to this file.
+
+    PYTHONPATH=src python benchmarks/bench_fleet.py            # full run
+    PYTHONPATH=src python benchmarks/bench_fleet.py --smoke    # CI gate
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+import tempfile
+import time
+
+from repro.core.cache import DriverCache
+from repro.core.collect import collect, default_probe_data
+from repro.core.device_model import V5E, V5eSimulator
+from repro.core.tuner import Klaraptor
+from repro.fleet import (FaultPlan, FleetConfig, FleetCoordinator, JobBoard,
+                         RetuneQueue, WallClockSim, collected_equal,
+                         device_to_json, execute_job, make_job,
+                         tier1_spec_refs)
+from repro.search import SearchBudget
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT_PATH = os.path.join(HERE, "BENCH_fleet.json")
+
+KERNEL = "matmul_b16"
+N_SIZES = 12                 # probe sizes = farm jobs (3 waves on 4 workers)
+N_CFG = 8
+REPEATS = 2
+SEED = 5
+N_WORKERS = 4
+SPEEDUP_GATE = 2.0           # farm must at least halve the wall clock
+SINGLE_TARGET_S = {"full": 4.5, "smoke": 3.0}    # calibrated sleep budget
+
+
+def _mk_device():
+    return V5eSimulator(V5E, noise=0.04, seed=11)
+
+
+def _pd(spec):
+    return default_probe_data(spec)[:N_SIZES]
+
+
+def _artifacts(root):
+    return sorted(os.path.basename(p) for p in glob.glob(
+        os.path.join(root, "**", "*.json"), recursive=True))
+
+
+def _calibrate_scale(spec, pd, target_s: float) -> tuple[float, float]:
+    """Scale so that sleeping ``scale x device_seconds`` over the whole
+    collect costs ~``target_s`` of wall clock.  The calibration collect
+    runs with no sleeps and is also the parity reference's byte-source."""
+    data = collect(spec, _mk_device(), probe_data=pd, repeats=REPEATS,
+                   max_configs_per_size=N_CFG, seed=SEED)
+    dev_s = data.probe_device_seconds
+    return target_s / max(dev_s, 1e-9), dev_s
+
+
+def bench_speedup(spec, pd, scale: float, workdir: str) -> dict:
+    """Single-process vs 4 thread workers, same WallClockSim envelope."""
+    single_dev = WallClockSim(_mk_device(), scale=scale)
+    c1 = DriverCache(os.path.join(workdir, "cache_single"))
+    t0 = time.perf_counter()
+    sp = Klaraptor(single_dev, hw=V5E, cache=c1).build_driver(
+        spec, probe_data=pd, repeats=REPEATS, max_configs_per_size=N_CFG,
+        seed=SEED)
+    single_wall = time.perf_counter() - t0
+
+    fleet_dev = WallClockSim(_mk_device(), scale=scale)
+    c2 = DriverCache(os.path.join(workdir, "cache_fleet"))
+    t0 = time.perf_counter()
+    with FleetCoordinator(
+            os.path.join(workdir, "spool_speed"), fleet_dev, hw=V5E,
+            cache=c2, config=FleetConfig(n_workers=N_WORKERS, lease_s=2.0,
+                                         job_timeout_s=600)) as fc:
+        fb = fc.tune({spec.name: tier1_spec_refs()[spec.name]},
+                     probe_data=pd, repeats=REPEATS,
+                     max_configs_per_size=N_CFG, seed=SEED)[spec.name]
+        n_jobs = fc.stats.jobs_submitted
+    fleet_wall = time.perf_counter() - t0
+
+    D = default_probe_data(spec)[-1]
+    return sp, {
+        "single_wall_s": single_wall,
+        "fleet_wall_s": fleet_wall,
+        "speedup": single_wall / max(fleet_wall, 1e-9),
+        "n_workers": N_WORKERS,
+        "n_jobs": n_jobs,
+        "parity_mismatches": collected_equal(sp.collected, fb.collected),
+        "same_choice": sp.driver.choose(D) == fb.driver.choose(D),
+        "same_artifacts": _artifacts(c1.root) == _artifacts(c2.root),
+    }
+
+
+def bench_faults(spec, pd, scale: float, workdir: str,
+                 reference) -> dict:
+    """Process-backend farm with a killed and a hung worker."""
+    fleet_dev = WallClockSim(_mk_device(), scale=scale)
+    cache = DriverCache(os.path.join(workdir, "cache_faults"))
+    faults = {0: FaultPlan(kill_at_job=1),
+              1: FaultPlan(hang_at_job=1, hang_s=2.0)}
+    t0 = time.perf_counter()
+    with FleetCoordinator(
+            os.path.join(workdir, "spool_faults"), fleet_dev, hw=V5E,
+            cache=cache,
+            config=FleetConfig(n_workers=N_WORKERS, backend="process",
+                               lease_s=0.6, job_timeout_s=600),
+            worker_faults=faults) as fc:
+        fb = fc.tune({spec.name: tier1_spec_refs()[spec.name]},
+                     probe_data=pd, repeats=REPEATS,
+                     max_configs_per_size=N_CFG, seed=SEED)[spec.name]
+        stats = fc.stats
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": wall,
+        "worker_deaths": stats.worker_deaths,
+        "respawns": stats.respawns,
+        "requeues": stats.requeues,
+        "watchdog_fires": stats.watchdog_fires,
+        "parity_mismatches": collected_equal(reference.collected,
+                                             fb.collected),
+    }
+
+
+def bench_duplicate_drop(spec, workdir: str) -> dict:
+    """One job, two executions (lease + speculated duplicate): identical
+    bytes, exactly one survives on the board."""
+    pd0 = default_probe_data(spec)[0]
+    job = make_job("batch", {
+        "spec": tier1_spec_refs()[spec.name].to_json(),
+        "device": device_to_json(_mk_device()), "hw": V5E.name,
+        "seed": SEED, "repeats": REPEATS,
+        "max_configs_per_size": N_CFG, "strategy": None, "max_stages": 3,
+        "shard_rows": None, "D": {k: int(v) for k, v in pd0.items()},
+        "batch_index": 0,
+        "budget": SearchBudget(max_executions=N_CFG * REPEATS)
+        .fingerprint()})
+    board = JobBoard(os.path.join(workdir, "spool_dup"))
+    board.submit(job)
+    slow = board.claim("slowworker")
+    assert slow is not None
+    speculated = board.speculate(job.key)
+    fast = board.claim("fastworker")
+    r_fast = execute_job(fast)
+    r_slow = execute_job(slow)
+    first = board.complete(job.key, "fastworker", {"payload": r_fast})
+    second = board.complete(job.key, "slowworker", {"payload": r_slow})
+    return {
+        "speculated": speculated,
+        "identical_bytes": json.dumps(r_fast, sort_keys=True)
+        == json.dumps(r_slow, sort_keys=True),
+        "first_accepted": first,
+        "second_dropped": not second,
+        "results_on_board": board.counts()["results"],
+    }
+
+
+def bench_retune(spec, pd, workdir: str) -> dict:
+    """Flight-ledger drift -> durable queue -> farm refit -> versioned
+    write-through, with the coordinator's registry untouched."""
+    from repro.core.driver import registry
+
+    cache = DriverCache(os.path.join(workdir, "cache_retune"))
+    Klaraptor(_mk_device(), hw=V5E, cache=cache).build_driver(
+        spec, probe_data=pd, repeats=REPEATS, max_configs_per_size=N_CFG,
+        seed=SEED, register=False)
+    ledger = os.path.join(workdir, "flight.jsonl")
+    with open(ledger, "w") as f:
+        f.write(json.dumps({
+            "type": "drift", "kernel": spec.name, "hw": V5E.name,
+            "bucket": "m=1024|k=512|n=512",
+            "D": {"m": 1024, "k": 512, "n": 512},
+            "config": {"bm": 512, "bn": 256, "bk": 256},
+            "rel_error_ewma": 0.4, "n_samples": 9,
+            "predicted_s": 1e-3, "observed_s": 1.4e-3}) + "\n")
+    q = RetuneQueue(os.path.join(workdir, "retune_state.json"))
+    new_keys = q.ingest(ledger)
+    gen_before = registry.generation
+    t0 = time.perf_counter()
+    with FleetCoordinator(
+            os.path.join(workdir, "spool_retune"), _mk_device(), hw=V5E,
+            cache=cache,
+            config=FleetConfig(n_workers=2, backend="process",
+                               job_timeout_s=600)) as fc:
+        outcomes = fc.retune(q, tier1_spec_refs(),
+                             budget=SearchBudget(max_executions=600),
+                             seed=SEED)
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": wall,
+        "new_keys": new_keys,
+        "succeeded": bool(outcomes and outcomes[0]["succeeded"]),
+        "cache_version": outcomes[0]["cache_version"] if outcomes else None,
+        "queue": q.summary(),
+        "registry_untouched": registry.generation == gen_before,
+    }
+
+
+def run(smoke: bool) -> dict:
+    spec = tier1_spec_refs()[KERNEL].build()
+    pd = _pd(spec)
+    target = SINGLE_TARGET_S["smoke" if smoke else "full"]
+    with tempfile.TemporaryDirectory(prefix="bench_fleet_") as workdir:
+        scale, dev_s = _calibrate_scale(spec, pd, target)
+        # the speedup stage's single-process build doubles as the fault
+        # drill's bit-identity reference (same seeds, same hyper)
+        reference, speed = bench_speedup(spec, pd, scale, workdir)
+        faults = bench_faults(spec, pd, scale, workdir, reference)
+        dup = bench_duplicate_drop(spec, workdir)
+        retune = bench_retune(spec, pd, workdir)
+    return {
+        "version": 1,
+        "kernel": KERNEL,
+        "calibration": {"target_single_s": target, "scale": scale,
+                        "probe_device_seconds": dev_s},
+        "speedup": speed,
+        "faults": faults,
+        "duplicate": dup,
+        "retune": retune,
+    }
+
+
+def main(argv=None) -> list[str]:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    report = run(smoke)
+    if not smoke:
+        with open(OUT_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+    sp, fl, dup, rt = (report["speedup"], report["faults"],
+                       report["duplicate"], report["retune"])
+    lines = [
+        f"fleet/speedup,{sp['speedup']:.2f},"
+        f"single={sp['single_wall_s']:.2f}s fleet={sp['fleet_wall_s']:.2f}s "
+        f"workers={sp['n_workers']} jobs={sp['n_jobs']} "
+        f"parity={'ok' if not sp['parity_mismatches'] else 'MISMATCH'}",
+        f"fleet/fault_recovery,{fl['wall_s']:.2f},"
+        f"deaths={fl['worker_deaths']} respawns={fl['respawns']} "
+        f"requeues={fl['requeues']} watchdog={fl['watchdog_fires']} "
+        f"parity={'ok' if not fl['parity_mismatches'] else 'MISMATCH'}",
+        f"fleet/duplicate_drop,{int(dup['second_dropped'])},"
+        f"speculated={dup['speculated']} "
+        f"identical_bytes={dup['identical_bytes']} "
+        f"results_on_board={dup['results_on_board']}",
+        f"fleet/retune,{rt['wall_s']:.2f},"
+        f"succeeded={rt['succeeded']} version={rt['cache_version']} "
+        f"registry_untouched={rt['registry_untouched']} "
+        f"queue_done={rt['queue']['done']}",
+    ]
+
+    failures = []
+    if sp["speedup"] < SPEEDUP_GATE:
+        failures.append(f"farm speedup {sp['speedup']:.2f}x < "
+                        f"{SPEEDUP_GATE}x at {sp['n_workers']} workers")
+    if sp["parity_mismatches"] or not sp["same_choice"] \
+            or not sp["same_artifacts"]:
+        failures.append(f"speedup-run parity broken: "
+                        f"{sp['parity_mismatches']} "
+                        f"choice={sp['same_choice']} "
+                        f"artifacts={sp['same_artifacts']}")
+    if fl["worker_deaths"] < 1 or fl["requeues"] < 1:
+        failures.append(f"fault drill did not observe its faults: "
+                        f"deaths={fl['worker_deaths']} "
+                        f"requeues={fl['requeues']}")
+    if fl["parity_mismatches"]:
+        failures.append(f"fault-run output diverged: "
+                        f"{fl['parity_mismatches']}")
+    if not (dup["speculated"] and dup["identical_bytes"]
+            and dup["second_dropped"] and dup["results_on_board"] == 1):
+        failures.append(f"duplicate-drop drill failed: {dup}")
+    if not (rt["succeeded"] and (rt["cache_version"] or 0) >= 1
+            and rt["registry_untouched"] and rt["queue"]["done"] == 1):
+        failures.append(f"retune pipeline failed: {rt}")
+    if failures:
+        lines.append(f"fleet/FAIL,0,{'; '.join(failures)}")
+        if smoke:
+            for ln in lines:
+                print(ln)
+            sys.exit(1)
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -21,6 +21,10 @@ Prints ``name,us_per_call,derived`` CSV lines:
               plus zero-hand-spec tuning of the auto kernels
               (BENCH_introspect.json); prints introspect/skipped if the
               demo cannot run here
+  fleet -- distributed tuning farm: wall-clock speedup at 4 workers,
+              kill/hang fault recovery with bit-identical merges, and the
+              ledger->retune->cache pipeline (BENCH_fleet.json); prints
+              fleet/skipped if the demo cannot run here
 """
 
 from __future__ import annotations
@@ -79,6 +83,14 @@ def main() -> None:
             print(line, flush=True)
     except Exception as e:
         print(f"trace/skipped,0,{e!r}", flush=True)
+    # Trailing: the tuning-farm drill (speedup, fault recovery, retune
+    # pipeline) must not mask the benches above (and vice versa).
+    try:
+        from benchmarks import bench_fleet
+        for line in bench_fleet.main([]):
+            print(line, flush=True)
+    except Exception as e:
+        print(f"fleet/skipped,0,{e!r}", flush=True)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import tempfile
 import time
 from dataclasses import dataclass
 from typing import Any, Mapping
@@ -54,7 +55,10 @@ __all__ = [
     "spec_fingerprint", "default_cache", "default_cache_dir",
 ]
 
-_ENTRY_VERSION = 1
+# v2: collect() derives per-batch probe rngs (order-independent shards for
+# fleet tuning), which changes the collected dataset for an otherwise
+# identical key -- old artifacts must never be found.
+_ENTRY_VERSION = 2
 
 
 def default_cache_dir() -> str:
@@ -62,6 +66,33 @@ def default_cache_dir() -> str:
     if env:
         return env
     return os.path.join(os.path.expanduser("~"), ".cache", "klaraptor")
+
+
+def _write_json_atomic(path: str, raw: Any) -> None:
+    """Publish ``raw`` at ``path`` in one atomic step.
+
+    The temp file name is unique per writer (mkstemp), so concurrent
+    write-throughs of the same key -- many fleet workers finishing the
+    same generation at once -- never interleave into one temp file; each
+    ``os.replace`` publishes a complete document and the last writer wins
+    (same-generation entries are interchangeable: the content hash covers
+    everything that matters).
+    """
+    fd, tmp = tempfile.mkstemp(
+        prefix=os.path.basename(path) + ".", suffix=".tmp",
+        dir=os.path.dirname(path) or ".")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(raw, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def _canonical(obj: Any) -> str:
@@ -313,10 +344,7 @@ class DriverCache:
             "tuning_version": entry.tuning_version,
             "content_hash": entry.content_hash(),
         }
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(raw, f)
-        os.replace(tmp, path)
+        _write_json_atomic(path, raw)
         return path
 
     # -- write ---------------------------------------------------------------
@@ -336,10 +364,7 @@ class DriverCache:
             "tuning_version": entry.tuning_version,
             "content_hash": entry.content_hash(),
         }
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(raw, f)
-        os.replace(tmp, path)       # atomic: concurrent readers never see halves
+        _write_json_atomic(path, raw)   # readers never see halves
         return path
 
     # -- maintenance ----------------------------------------------------------

@@ -25,28 +25,157 @@ Derived per-sample targets (the L_i of the MBP-CBP skeleton):
 The residual uses the *known* decision skeleton (overlap iff >= 2 buffers
 fit VMEM), so what remains for ovh_step is dispatch overhead + overlap leak
 + pipeline fill -- the "departure delay" analogue of the MWP-CWP model.
+
+Shardability
+------------
+A collect run is a sequence of independent per-size **batches**, and this
+module is factored so a tuning farm (``repro.fleet``) can execute batches
+-- or even row-chunks inside a batch -- on different workers and merge the
+shards into a dataset **bit-identical** to the single-process run:
+
+* every batch draws from its own ``RandomState(batch_seed(seed, i))`` --
+  strategy proposals and probe noise never couple two batches;
+* with ``shard_rows`` set, probe-call noise additionally comes from
+  per-chunk streams (``chunk_noise_seed``) via ``ChunkedProber``, so the
+  noise a row sees depends only on (seed, batch, call, chunk position),
+  never on which process probes it;
+* ``merge_shards`` folds ``BatchShard``s in batch-index order -- not
+  completion order -- so the merged arrays are a pure function of shard
+  contents.
+
+All seeds are derived with a platform-stable hash (sha256), never Python's
+``hash``.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
 import time
 from dataclasses import dataclass
-from typing import Mapping, Sequence
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
 from repro.trace import trace_span
 
-from .device_model import DeviceModel, HardwareParams, V5E
+from .device_model import DeviceModel, HardwareParams, RowProbe, V5E
 from .kernel_spec import KernelSpec
 
-__all__ = ["CollectedData", "default_probe_data", "collect"]
+__all__ = [
+    "BatchShard", "ChunkedProber", "CollectedData", "batch_budgets",
+    "batch_seed", "chunk_noise_seed", "collect", "collect_batch",
+    "concat_row_probes", "default_probe_data", "merge_shards", "stable_mix",
+]
 
 Dims = Mapping[str, int]
 
 # The columnar metric targets a collection run produces.
 METRIC_COLUMNS = ("total_time_s", "mem_step", "cmp_step", "ovh_step")
 
+
+# -- deterministic seed derivation --------------------------------------------
+
+def stable_mix(*parts) -> int:
+    """Deterministic 32-bit seed from structured parts (order-sensitive).
+
+    sha256-based so the value is identical across processes, platforms and
+    ``PYTHONHASHSEED`` -- the property that lets a fleet worker reproduce
+    the exact noise stream a single-process collect would have drawn.
+    """
+    payload = json.dumps(parts, sort_keys=True, default=str).encode()
+    return int.from_bytes(hashlib.sha256(payload).digest()[:4], "big")
+
+
+def batch_seed(seed: int, batch_index: int) -> int:
+    """Seed of one probe-size batch's RandomState (strategy + noise)."""
+    return stable_mix("collect.batch", int(seed), int(batch_index))
+
+
+def chunk_noise_seed(seed: int, batch_index: int, call_index: int,
+                     chunk_index: int) -> int:
+    """Seed of one row-chunk's probe-noise RandomState (``shard_rows``)."""
+    return stable_mix("collect.noise", int(seed), int(batch_index),
+                      int(call_index), int(chunk_index))
+
+
+def batch_budgets(n_batches: int, budget, max_configs_per_size: int,
+                  repeats: int) -> list:
+    """The per-batch ``SearchBudget``s of one collect run.
+
+    One function shared by ``collect`` and fleet coordinators so both
+    account identically: no total budget means an independent
+    ``max_configs_per_size * repeats`` execution budget per size; a total
+    budget is split evenly across the sizes.
+    """
+    from repro.search import SearchBudget
+
+    if budget is not None and not isinstance(budget, SearchBudget):
+        raise TypeError(
+            f"budget must be a repro.search.SearchBudget, got "
+            f"{type(budget).__name__}")
+    if budget is None:
+        return [SearchBudget(max_executions=max_configs_per_size * repeats)
+                for _ in range(n_batches)]
+    return budget.split(n_batches)
+
+
+# -- row-chunked probing ------------------------------------------------------
+
+def concat_row_probes(parts: Sequence[RowProbe]) -> RowProbe:
+    """Concatenate per-chunk ``RowProbe``s back into one (row order kept)."""
+    if len(parts) == 1:
+        return parts[0]
+    return RowProbe(**{
+        f.name: np.concatenate([getattr(p, f.name) for p in parts])
+        for f in dataclasses.fields(RowProbe)})
+
+
+class ChunkedProber:
+    """Chunk-seeded probe executor for one collect batch.
+
+    Splits every probe call into fixed-size row chunks and draws each
+    chunk's measurement noise from its own derived RandomState
+    (``chunk_noise_seed(seed, batch, call, chunk)``).  The result is
+    independent of which process executes a chunk and of execution order:
+    a fleet worker probing chunk (call, j) draws exactly the noise this
+    in-process prober would -- the bit-identity contract of
+    ``repro.fleet`` row-shard jobs.  Strategy randomness stays on the
+    batch rng, which this prober never touches.
+    """
+
+    def __init__(self, device: DeviceModel, tt, seed: int, batch_index: int,
+                 shard_rows: int):
+        if shard_rows < 1:
+            raise ValueError(f"shard_rows must be >= 1, got {shard_rows}")
+        self.device = device
+        self.tt = tt
+        self.seed = int(seed)
+        self.batch_index = int(batch_index)
+        self.shard_rows = int(shard_rows)
+        self.call_index = 0
+
+    def chunks(self, n_rows: int) -> list[slice]:
+        return [slice(lo, min(lo + self.shard_rows, n_rows))
+                for lo in range(0, n_rows, self.shard_rows)]
+
+    def probe_chunk(self, idx: np.ndarray, reps: np.ndarray,
+                    call_index: int, chunk_index: int) -> RowProbe:
+        """Probe one chunk with its derived noise stream (worker-callable)."""
+        rng = np.random.RandomState(chunk_noise_seed(
+            self.seed, self.batch_index, call_index, chunk_index))
+        return self.device.probe_rows(self.tt.select(idx), rng, reps)
+
+    def __call__(self, idx: np.ndarray, reps: np.ndarray) -> RowProbe:
+        call = self.call_index
+        self.call_index += 1
+        parts = [self.probe_chunk(idx[sl], reps[sl], call, j)
+                 for j, sl in enumerate(self.chunks(int(idx.size)))]
+        return concat_row_probes(parts)
+
+
+# -- datasets -----------------------------------------------------------------
 
 @dataclass
 class CollectedData:
@@ -97,6 +226,90 @@ class CollectedData:
             collect_wall_seconds=stats.get("collect_wall_seconds", 0.0),
         )
 
+    def to_json(self) -> dict:
+        """JSON-able form; float64 round-trips exactly through json repr."""
+        return {
+            "spec_name": self.spec_name,
+            "data_params": list(self.data_params),
+            "program_params": list(self.program_params),
+            "columns": {k: v.tolist() for k, v in self.columns.items()},
+            "metrics": {k: v.tolist() for k, v in self.metrics.items()},
+            "grid_steps": self.grid_steps.tolist(),
+            "vmem_stage_bytes": self.vmem_stage_bytes.tolist(),
+            "n_probe_executions": int(self.n_probe_executions),
+            "probe_device_seconds": float(self.probe_device_seconds),
+            "collect_wall_seconds": float(self.collect_wall_seconds),
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "CollectedData":
+        return cls(
+            spec_name=d["spec_name"],
+            data_params=tuple(d["data_params"]),
+            program_params=tuple(d["program_params"]),
+            columns={k: np.asarray(v, dtype=np.int64)
+                     for k, v in d["columns"].items()},
+            metrics={k: np.asarray(v, dtype=np.float64)
+                     for k, v in d["metrics"].items()},
+            grid_steps=np.asarray(d["grid_steps"], dtype=np.int64),
+            vmem_stage_bytes=np.asarray(d["vmem_stage_bytes"],
+                                        dtype=np.int64),
+            n_probe_executions=int(d["n_probe_executions"]),
+            probe_device_seconds=float(d["probe_device_seconds"]),
+            collect_wall_seconds=float(d["collect_wall_seconds"]),
+        )
+
+
+@dataclass
+class BatchShard:
+    """One probe-size batch's worth of collected samples.
+
+    The unit a fleet worker computes and ships back; ``merge_shards``
+    folds a full set into one ``CollectedData``.  Arrays keep the probe
+    order within the batch, so merging sorted-by-``batch_index`` shards
+    reproduces the single-process concatenation exactly.
+    """
+
+    batch_index: int
+    D: dict
+    columns: dict[str, np.ndarray]
+    metrics: dict[str, np.ndarray]
+    grid_steps: np.ndarray
+    vmem_stage_bytes: np.ndarray
+    n_candidates: int
+    n_probe_executions: int
+    probe_device_seconds: float
+
+    def to_json(self) -> dict:
+        return {
+            "batch_index": int(self.batch_index),
+            "D": {k: int(v) for k, v in self.D.items()},
+            "columns": {k: v.tolist() for k, v in self.columns.items()},
+            "metrics": {k: v.tolist() for k, v in self.metrics.items()},
+            "grid_steps": self.grid_steps.tolist(),
+            "vmem_stage_bytes": self.vmem_stage_bytes.tolist(),
+            "n_candidates": int(self.n_candidates),
+            "n_probe_executions": int(self.n_probe_executions),
+            "probe_device_seconds": float(self.probe_device_seconds),
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "BatchShard":
+        return cls(
+            batch_index=int(d["batch_index"]),
+            D=dict(d["D"]),
+            columns={k: np.asarray(v, dtype=np.int64)
+                     for k, v in d["columns"].items()},
+            metrics={k: np.asarray(v, dtype=np.float64)
+                     for k, v in d["metrics"].items()},
+            grid_steps=np.asarray(d["grid_steps"], dtype=np.int64),
+            vmem_stage_bytes=np.asarray(d["vmem_stage_bytes"],
+                                        dtype=np.int64),
+            n_candidates=int(d["n_candidates"]),
+            n_probe_executions=int(d["n_probe_executions"]),
+            probe_device_seconds=float(d["probe_device_seconds"]),
+        )
+
 
 def default_probe_data(spec: KernelSpec,
                        sizes: Sequence[int] = (256, 512, 1024)
@@ -117,6 +330,165 @@ def default_probe_data(spec: KernelSpec,
             for combo in itertools.product(*axes)]
 
 
+# -- one batch ----------------------------------------------------------------
+
+def collect_batch(
+    spec: KernelSpec,
+    device: DeviceModel,
+    D: Dims,
+    hw: HardwareParams = V5E,
+    repeats: int = 3,
+    max_configs_per_size: int = 32,
+    seed: int = 0,
+    batch_index: int = 0,
+    budget=None,
+    strategy=None,
+    max_stages: int = 3,
+    shard_rows: int | None = None,
+    prober_factory: "Callable | None" = None,
+) -> BatchShard:
+    """Probe one data size; the shard a fleet worker executes.
+
+    ``budget`` is this batch's own ``SearchBudget`` (one element of
+    ``batch_budgets``).  Pass a resolved ``Strategy`` instance to keep run
+    lifecycle (``begin_run``) with the caller -- what ``collect`` does; a
+    name/None is resolved *and* ``begin_run`` here (standalone worker
+    semantics, correct for strategies without cross-size state).
+
+    The batch rng is ``RandomState(batch_seed(seed, batch_index))``
+    regardless of who calls: the shard's bytes depend only on its inputs.
+    ``prober_factory(batch_index, D, tt)`` (optional) overrides probe
+    execution -- the fleet's row-shard hook; ``shard_rows`` alone selects
+    the in-process ``ChunkedProber`` with the same chunk seeding workers
+    use.
+    """
+    from repro.search import SearchBudget, Strategy, resolve_strategy, \
+        search_table
+
+    if not isinstance(strategy, Strategy):
+        strategy = resolve_strategy(strategy)
+        strategy.begin_run()
+    if budget is None:
+        budget = SearchBudget(max_executions=max_configs_per_size * repeats)
+    rng = np.random.RandomState(batch_seed(seed, batch_index))
+    ledger = budget.ledger()
+
+    all_vars = tuple(spec.data_params) + tuple(spec.program_params)
+    col_blocks: dict[str, list[np.ndarray]] = {v: [] for v in all_vars}
+    met_blocks: dict[str, list[np.ndarray]] = {m: [] for m in METRIC_COLUMNS}
+    steps_blocks: list[np.ndarray] = []
+    stage_blocks: list[np.ndarray] = []
+
+    with trace_span("collect.batch", kernel=spec.name, D=dict(D),
+                    batch_index=batch_index,
+                    strategy=dict(strategy.fingerprint())) as bsp:
+        table = spec.candidates(D, hw)
+        if len(table):
+            def record(indices: np.ndarray, probe) -> None:
+                n = int(indices.size)
+                t_tot = probe.total_time_s
+                t_mem = probe.mem_time_s
+                t_cmp = probe.compute_time_s
+                steps = np.maximum(probe.grid_steps, 1)
+                buffers = np.minimum(
+                    hw.vmem_bytes
+                    // np.maximum(probe.vmem_stage_bytes, 1),
+                    max_stages)
+                skeleton = np.where(buffers >= 2,
+                                    np.maximum(t_mem, t_cmp),
+                                    t_mem + t_cmp)
+                ovh = np.maximum((t_tot - skeleton) / steps, 1e-9)
+                for d, v in D.items():
+                    col_blocks[d].append(np.full(n, int(v), dtype=np.int64))
+                for p in spec.program_params:
+                    col_blocks[p].append(table[p][indices])
+                met_blocks["total_time_s"].append(t_tot)
+                met_blocks["mem_step"].append(t_mem / steps)
+                met_blocks["cmp_step"].append(t_cmp / steps)
+                met_blocks["ovh_step"].append(ovh)
+                steps_blocks.append(steps)
+                stage_blocks.append(probe.vmem_stage_bytes)
+
+            if prober_factory is not None:
+                pf = lambda tt: prober_factory(batch_index, dict(D), tt)  # noqa: E731
+            elif shard_rows is not None:
+                pf = lambda tt: ChunkedProber(device, tt, seed, batch_index,  # noqa: E731
+                                              shard_rows)
+            else:
+                pf = None
+            search_table(spec, device, D, table, strategy, ledger, rng,
+                         hw=hw, default_repeats=repeats, observer=record,
+                         prober_factory=pf)
+        bsp.set(n_candidates=len(table),
+                executions=ledger.spent_executions,
+                device_seconds=ledger.spent_device_seconds)
+
+    def _cat(blocks, dtype=None):
+        if not blocks:
+            return np.empty(0, dtype=dtype or np.float64)
+        return np.concatenate(blocks)
+
+    return BatchShard(
+        batch_index=int(batch_index),
+        D=dict(D),
+        columns={v: _cat(col_blocks[v], np.int64) for v in all_vars},
+        metrics={m: _cat(met_blocks[m]) for m in METRIC_COLUMNS},
+        grid_steps=_cat(steps_blocks, np.int64),
+        vmem_stage_bytes=_cat(stage_blocks, np.int64),
+        n_candidates=len(table),
+        n_probe_executions=ledger.spent_executions,
+        probe_device_seconds=ledger.spent_device_seconds,
+    )
+
+
+def merge_shards(spec: KernelSpec, shards: Sequence[BatchShard],
+                 collect_wall_seconds: float = 0.0) -> CollectedData:
+    """Fold per-batch shards into one canonical ``CollectedData``.
+
+    Shards are concatenated in ``batch_index`` order -- never completion
+    order -- so the merged dataset is a pure function of the shard
+    contents: a fleet merging out-of-order worker results reproduces the
+    single-process ``collect`` bit for bit (including the float summation
+    order of the device-seconds statistic).  A duplicate batch index is an
+    error: lease reassignment must dedup results *before* the merge.
+    """
+    ordered = sorted(shards, key=lambda s: s.batch_index)
+    seen: set[int] = set()
+    for s in ordered:
+        if s.batch_index in seen:
+            raise ValueError(f"duplicate shard for batch {s.batch_index}")
+        seen.add(s.batch_index)
+
+    all_vars = tuple(spec.data_params) + tuple(spec.program_params)
+
+    def _cat(blocks, dtype=None):
+        blocks = [b for b in blocks if b.size]
+        if not blocks:
+            return np.empty(0, dtype=dtype or np.float64)
+        return np.concatenate(blocks)
+
+    n_exec = 0
+    device_seconds = 0.0
+    for s in ordered:
+        n_exec += s.n_probe_executions
+        device_seconds += s.probe_device_seconds
+    return CollectedData(
+        spec_name=spec.name,
+        data_params=tuple(spec.data_params),
+        program_params=tuple(spec.program_params),
+        columns={v: _cat([s.columns[v] for s in ordered], np.int64)
+                 for v in all_vars},
+        metrics={m: _cat([s.metrics[m] for s in ordered])
+                 for m in METRIC_COLUMNS},
+        grid_steps=_cat([s.grid_steps for s in ordered], np.int64),
+        vmem_stage_bytes=_cat([s.vmem_stage_bytes for s in ordered],
+                              np.int64),
+        n_probe_executions=n_exec,
+        probe_device_seconds=device_seconds,
+        collect_wall_seconds=collect_wall_seconds,
+    )
+
+
 def collect(
     spec: KernelSpec,
     device: DeviceModel,
@@ -128,6 +500,8 @@ def collect(
     max_stages: int = 3,
     strategy=None,
     budget=None,
+    shard_rows: int | None = None,
+    prober_factory: "Callable | None" = None,
 ) -> CollectedData:
     """Probe the device oracle at strategy-selected (D, P) points.
 
@@ -135,96 +509,36 @@ def collect(
     stratified ``random``); ``budget`` a total ``SearchBudget`` split evenly
     across the probe sizes (default: ``max_configs_per_size * repeats``
     executions per size, matching the old head-cut's probe count).
+
+    ``shard_rows`` switches probe noise to per-chunk derived streams
+    (``ChunkedProber``) so fleet row-shard jobs reproduce this run
+    bit-identically; ``prober_factory(batch_index, D, tt)`` overrides
+    probe execution outright (the fleet coordinator's remote-probe hook).
     """
-    from repro.search import SearchBudget, resolve_strategy, search_table
+    from repro.search import resolve_strategy
 
     t0 = time.perf_counter()
-    rng = np.random.RandomState(seed)
     probe_data = list(probe_data) if probe_data is not None else \
         default_probe_data(spec)
     strategy = resolve_strategy(strategy)
     strategy.begin_run()
-    if budget is not None and not isinstance(budget, SearchBudget):
-        raise TypeError(
-            f"budget must be a repro.search.SearchBudget, got "
-            f"{type(budget).__name__}")
-    if budget is None:
-        ledgers = [SearchBudget(
-            max_executions=max_configs_per_size * repeats).ledger()
-            for _ in probe_data]
-    else:
-        ledgers = [b.ledger() for b in budget.split(len(probe_data))]
-
-    all_vars = tuple(spec.data_params) + tuple(spec.program_params)
-    col_blocks: dict[str, list[np.ndarray]] = {v: [] for v in all_vars}
-    met_blocks: dict[str, list[np.ndarray]] = {m: [] for m in METRIC_COLUMNS}
-    steps_blocks: list[np.ndarray] = []
-    stage_blocks: list[np.ndarray] = []
-    n_exec = 0
-    device_seconds = 0.0
+    budgets = batch_budgets(len(probe_data), budget,
+                            max_configs_per_size, repeats)
     strategy_fp = dict(strategy.fingerprint())
     budget_fp = dict(budget.fingerprint()) if budget is not None else None
+    shards: list[BatchShard] = []
     with trace_span("collect", kernel=spec.name, n_batches=len(probe_data),
                     strategy=strategy_fp, budget=budget_fp) as csp:
-        for D, ledger in zip(probe_data, ledgers):
-            with trace_span("collect.batch", kernel=spec.name, D=dict(D),
-                            strategy=strategy_fp, budget=budget_fp) as bsp:
-                table = spec.candidates(D, hw)
-                if not len(table):
-                    bsp.set(n_candidates=0)
-                    continue
-
-                def record(indices: np.ndarray, probe) -> None:
-                    n = int(indices.size)
-                    t_tot = probe.total_time_s
-                    t_mem = probe.mem_time_s
-                    t_cmp = probe.compute_time_s
-                    steps = np.maximum(probe.grid_steps, 1)
-                    buffers = np.minimum(
-                        hw.vmem_bytes
-                        // np.maximum(probe.vmem_stage_bytes, 1),
-                        max_stages)
-                    skeleton = np.where(buffers >= 2,
-                                        np.maximum(t_mem, t_cmp),
-                                        t_mem + t_cmp)
-                    ovh = np.maximum((t_tot - skeleton) / steps, 1e-9)
-                    for d, v in D.items():
-                        col_blocks[d].append(
-                            np.full(n, int(v), dtype=np.int64))
-                    for p in spec.program_params:
-                        col_blocks[p].append(table[p][indices])
-                    met_blocks["total_time_s"].append(t_tot)
-                    met_blocks["mem_step"].append(t_mem / steps)
-                    met_blocks["cmp_step"].append(t_cmp / steps)
-                    met_blocks["ovh_step"].append(ovh)
-                    steps_blocks.append(steps)
-                    stage_blocks.append(probe.vmem_stage_bytes)
-
-                search_table(spec, device, D, table, strategy, ledger, rng,
-                             hw=hw, default_repeats=repeats,
-                             observer=record)
-                n_exec += ledger.spent_executions
-                device_seconds += ledger.spent_device_seconds
-                bsp.set(n_candidates=len(table),
-                        executions=ledger.spent_executions,
-                        device_seconds=ledger.spent_device_seconds)
-        csp.set(n_probe_executions=n_exec,
-                probe_device_seconds=device_seconds)
-
-    def _cat(blocks, dtype=None):
-        if not blocks:
-            return np.empty(0, dtype=dtype or np.float64)
-        return np.concatenate(blocks)
-
-    return CollectedData(
-        spec_name=spec.name,
-        data_params=tuple(spec.data_params),
-        program_params=tuple(spec.program_params),
-        columns={v: _cat(col_blocks[v], np.int64) for v in all_vars},
-        metrics={m: _cat(met_blocks[m]) for m in METRIC_COLUMNS},
-        grid_steps=_cat(steps_blocks, np.int64),
-        vmem_stage_bytes=_cat(stage_blocks, np.int64),
-        n_probe_executions=n_exec,
-        probe_device_seconds=device_seconds,
-        collect_wall_seconds=time.perf_counter() - t0,
-    )
+        for i, (D, b) in enumerate(zip(probe_data, budgets)):
+            shards.append(collect_batch(
+                spec, device, D, hw=hw, repeats=repeats,
+                max_configs_per_size=max_configs_per_size, seed=seed,
+                batch_index=i, budget=b, strategy=strategy,
+                max_stages=max_stages, shard_rows=shard_rows,
+                prober_factory=prober_factory))
+        csp.set(n_probe_executions=sum(s.n_probe_executions for s in shards),
+                probe_device_seconds=float(
+                    np.sum([s.probe_device_seconds for s in shards])
+                    if shards else 0.0))
+    return merge_shards(spec, shards,
+                        collect_wall_seconds=time.perf_counter() - t0)

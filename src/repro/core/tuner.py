@@ -131,7 +131,18 @@ class Klaraptor:
         strategy=None,
         budget=None,
         cache_version: int = 0,
+        shard_rows: int | None = None,
+        data: CollectedData | None = None,
     ) -> BuildResult:
+        """Collect -> fit -> codegen one driver (cache-aware).
+
+        ``data`` (optional) supplies an already-collected dataset -- the
+        fleet merge layer's write-through path: the probe hyperparameters
+        must still describe how it was collected, so the cache key is
+        identical to the single-process build the farm replaced.
+        ``shard_rows`` selects chunk-seeded probe noise (see
+        ``collect``); it is part of the build identity when set.
+        """
         from repro.search import SearchBudget, resolve_strategy
 
         t0 = time.perf_counter()
@@ -140,6 +151,9 @@ class Klaraptor:
             raise TypeError(
                 f"budget must be a repro.search.SearchBudget, got "
                 f"{type(budget).__name__}")
+        if data is not None and data.spec_name != spec.name:
+            raise ValueError(
+                f"supplied data is for {data.spec_name!r}, not {spec.name!r}")
         hyper = {
             "repeats": repeats,
             "max_configs_per_size": max_configs_per_size,
@@ -156,6 +170,9 @@ class Klaraptor:
             "strategy": strategy.fingerprint(),
             "budget": budget.fingerprint() if budget is not None else None,
         }
+        # Folded in only when set, so pre-existing builds keep their keys.
+        if shard_rows is not None:
+            hyper["shard_rows"] = int(shard_rows)
         key = cache_key(spec, self.hw, hyper) if self.cache else None
 
         with trace_span("build_driver", kernel=spec.name) as bsp:
@@ -177,12 +194,14 @@ class Klaraptor:
                         from_cache=True,
                     )
 
-            data = collect(
-                spec, self.device,
-                probe_data=probe_data, hw=self.hw, repeats=repeats,
-                max_configs_per_size=max_configs_per_size, seed=seed,
-                strategy=strategy, budget=budget,
-            )
+            if data is None:
+                data = collect(
+                    spec, self.device,
+                    probe_data=probe_data, hw=self.hw, repeats=repeats,
+                    max_configs_per_size=max_configs_per_size, seed=seed,
+                    strategy=strategy, budget=budget,
+                    shard_rows=shard_rows,
+                )
             fits: dict[str, FitResult] = {}
             with trace_span("fit", kernel=spec.name,
                             n_samples=len(data)) as fsp:

@@ -23,7 +23,14 @@ class FaultToleranceError(RuntimeError):
 
 
 class Watchdog:
-    """Background timer that fires if no heartbeat arrives within timeout."""
+    """Background timer that fires if no heartbeat arrives within timeout.
+
+    Firing is one-shot: once ``on_timeout`` has run, the watchdog stays
+    disarmed (``fired`` remains True, beats are ignored) until ``reset()``
+    re-arms it.  The monitor thread persists across fire/reset cycles, so
+    lease reassignment can keep one watchdog per worker for the lifetime
+    of the farm instead of leaking a thread per retry.
+    """
 
     def __init__(self, timeout_s: float, on_timeout: Callable[[], None]
                  | None = None):
@@ -45,13 +52,23 @@ class Watchdog:
     def fired(self) -> bool:
         return self._fired.is_set()
 
+    def reset(self) -> None:
+        """Re-arm after a fire: fresh deadline, ``fired`` cleared.
+
+        Safe to call whether or not the watchdog has fired; a reset on a
+        live watchdog is just a beat.
+        """
+        self._last = time.monotonic()
+        self._fired.clear()
+
     def _run(self) -> None:
         while not self._stop.wait(min(self.timeout_s / 4, 0.25)):
+            if self._fired.is_set():
+                continue        # disarmed until reset()
             if time.monotonic() - self._last > self.timeout_s:
                 self._fired.set()
                 if self.on_timeout is not None:
                     self.on_timeout()
-                return
 
     def stop(self) -> None:
         self._stop.set()

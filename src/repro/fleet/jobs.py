@@ -1,0 +1,221 @@
+"""Content-keyed probe jobs: the farm's unit of idempotent work.
+
+A ``ProbeJob`` is a JSON document that *fully* describes one piece of
+probe work -- kernel spec (by constructor reference), device oracle (by
+value), data shape, seeds, budget -- plus a content key (sha256 of the
+canonical payload).  Two consequences the whole farm leans on:
+
+* **idempotence** -- executing the same job twice produces bit-identical
+  results (all randomness is derived from seeds in the payload), so a
+  reassigned lease or a speculative duplicate can never corrupt the
+  merge: the second result is simply dropped by key;
+* **dedup** -- resubmitting identical work (coordinator restart, retry)
+  collapses onto the same spool entry.
+
+Job kinds:
+
+  ``batch``   one probe-size shard of a collect run (``collect_batch``)
+  ``kernel``  a whole kernel's collect -- for strategies with cross-size
+              state (successive halving survivors) that cannot shard
+  ``rows``    one row-chunk of a single probe call (finest grain; noise
+              comes from ``chunk_noise_seed`` so placement is invisible)
+  ``retune``  a budget-capped drift reaction (search -> refit -> versioned
+              cache write-through) for one ledger-fed drift key
+
+``WallClockSim`` wraps a simulator so probe calls *take* wall-clock time
+proportional to the simulated device-seconds they return: the stand-in
+for real hardware where probing is expensive, and what makes fleet
+speedup measurable.  Its fingerprint delegates to the inner oracle -- the
+timing envelope is data-invisible, so farm-built artifacts share cache
+keys with plain single-process builds.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import importlib
+import json
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+from repro.core.device_model import (DeviceModel, HardwareParams, RowProbe,
+                                     V5E, V5P, V5eSimulator)
+
+__all__ = [
+    "JOB_KINDS", "ProbeJob", "SpecRef", "WallClockSim", "device_from_json",
+    "device_to_json", "hw_by_name", "job_key", "make_job", "tier1_spec_refs",
+]
+
+JOB_KINDS = ("batch", "kernel", "rows", "retune")
+
+_HW_BY_NAME = {V5E.name: V5E, V5P.name: V5P}
+
+
+def hw_by_name(name: str) -> HardwareParams:
+    try:
+        return _HW_BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware {name!r}; "
+                       f"known: {sorted(_HW_BY_NAME)}") from None
+
+
+@dataclass(frozen=True)
+class SpecRef:
+    """A kernel spec by constructor reference (module:function(**kwargs)).
+
+    Jobs must be self-contained JSON, and a ``KernelSpec`` is cheap to
+    rebuild from its constructor -- so jobs carry the recipe, not the
+    object.  The reference is part of the job's content key.
+    """
+
+    module: str
+    func: str
+    kwargs: tuple = ()
+
+    def build(self):
+        fn = getattr(importlib.import_module(self.module), self.func)
+        return fn(**dict(self.kwargs))
+
+    def to_json(self) -> dict:
+        return {"module": self.module, "func": self.func,
+                "kwargs": [list(kv) for kv in self.kwargs]}
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "SpecRef":
+        return cls(module=d["module"], func=d["func"],
+                   kwargs=tuple((k, v) for k, v in d.get("kwargs", ())))
+
+
+def tier1_spec_refs() -> dict[str, SpecRef]:
+    """The four tier-1 kernels, keyed by their spec names."""
+    refs = {}
+    for func in ("matmul_spec", "flash_attention_spec", "moe_gmm_spec",
+                 "ssd_scan_spec"):
+        ref = SpecRef("repro.core", func)
+        refs[ref.build().name] = ref
+    return refs
+
+
+# -- device oracles over the wire ---------------------------------------------
+
+class WallClockSim(DeviceModel):
+    """Wall-clock-faithful wrapper around a simulator oracle.
+
+    Probe *results* delegate to the inner simulator (bit-identical data,
+    same fingerprint -> same cache keys), but every ``probe_rows`` call
+    sleeps ``scale`` x the simulated device-seconds it produced -- the
+    farm's stand-in for a real device where probing costs real time.
+    Sleeps happen in small slices with ``beat`` called between them, so a
+    live worker keeps heartbeating through a long probe while a *hung*
+    worker (which stops beating) is still distinguishable.
+    """
+
+    def __init__(self, inner: DeviceModel, scale: float,
+                 beat: Callable[[], None] | None = None,
+                 slice_s: float = 0.05):
+        self.inner = inner
+        self.scale = float(scale)
+        self.beat = beat
+        self.slice_s = float(slice_s)
+
+    @property
+    def hw(self) -> HardwareParams:  # type: ignore[override]
+        return self.inner.hw
+
+    def fingerprint(self) -> dict:
+        return self.inner.fingerprint()    # timing envelope is data-invisible
+
+    def _sleep(self, seconds: float) -> None:
+        deadline = time.monotonic() + max(seconds, 0.0)
+        while True:
+            if self.beat is not None:
+                self.beat()
+            left = deadline - time.monotonic()
+            if left <= 0:
+                return
+            time.sleep(min(left, self.slice_s))
+
+    def probe_rows(self, table, rng, repeats=1) -> RowProbe:
+        probe = self.inner.probe_rows(table, rng, repeats)
+        self._sleep(float(np.sum(probe.device_seconds)) * self.scale)
+        return probe
+
+    def probe_batch(self, table, rng, repeats=1):
+        batch = self.inner.probe_batch(table, rng, repeats)
+        self._sleep(float(np.sum(batch.total_time_s)) * self.scale)
+        return batch
+
+    def true_time_batch(self, table) -> np.ndarray:
+        return self.inner.true_time_batch(table)
+
+
+def device_to_json(device: DeviceModel) -> dict:
+    """Serialize a device oracle into a job payload."""
+    if isinstance(device, WallClockSim):
+        return {"kind": "wallclock", "scale": device.scale,
+                "inner": device_to_json(device.inner)}
+    if isinstance(device, V5eSimulator):
+        return {"kind": "v5e_sim", "hw": device.hw.name,
+                "noise": device.noise, "seed": device._seed}
+    raise TypeError(
+        f"cannot serialize device oracle {type(device).__name__} into a "
+        f"fleet job (teach fleet.jobs.device_to_json about it)")
+
+
+def device_from_json(d: Mapping,
+                     beat: Callable[[], None] | None = None) -> DeviceModel:
+    kind = d.get("kind")
+    if kind == "wallclock":
+        return WallClockSim(device_from_json(d["inner"]), d["scale"],
+                            beat=beat)
+    if kind == "v5e_sim":
+        return V5eSimulator(hw=hw_by_name(d["hw"]), noise=d["noise"],
+                            seed=d["seed"])
+    raise KeyError(f"unknown device kind {kind!r}")
+
+
+# -- jobs ---------------------------------------------------------------------
+
+def _json_default(o: Any):
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"Object of type {type(o).__name__} "
+                    f"is not JSON serializable")
+
+
+def _canonical(obj: Any) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      default=_json_default)
+
+
+def job_key(kind: str, payload: Mapping) -> str:
+    """Content address of one job: same work -> same key, always."""
+    return hashlib.sha256(
+        _canonical({"kind": kind, "payload": payload}).encode()).hexdigest()
+
+
+@dataclass(frozen=True)
+class ProbeJob:
+    """One idempotent unit of farm work (see module docstring for kinds)."""
+
+    kind: str
+    payload: dict
+    key: str
+
+    def to_json(self) -> dict:
+        return {"kind": self.kind, "payload": self.payload, "key": self.key}
+
+
+def make_job(kind: str, payload: Mapping) -> ProbeJob:
+    if kind not in JOB_KINDS:
+        raise ValueError(f"unknown job kind {kind!r}; known: {JOB_KINDS}")
+    payload = json.loads(_canonical(payload))   # normalize (tuples -> lists)
+    return ProbeJob(kind=kind, payload=payload,
+                    key=job_key(kind, payload))

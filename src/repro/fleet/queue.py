@@ -1,0 +1,150 @@
+"""The durable drift-retuning queue: flight ledgers in, retune jobs out.
+
+Serving nodes persist every drift trip to their JSONL flight ledger
+(``repro.trace.Ledger``; PR 7).  ``RetuneQueue`` tails those ledgers --
+per-file byte offsets, advanced only past *complete* lines, survive
+restarts in the queue's own state file -- deduplicates drifted
+(kernel, hw, shape-bucket) keys, and hands the pending set to the fleet
+coordinator, which probes and refits farm-side under one ``SearchBudget``
+instead of stealing device-seconds from live serving.
+
+The state file is one atomic JSON document: offsets, pending keys (with
+the freshest drift event per key), done keys (with the refit summary),
+failures.  Ingest is idempotent -- re-reading a ledger only consumes
+bytes past the stored offset, and a key already pending or done only
+bumps its counters.  Corrupt mid-file lines are skipped and counted
+(the lenient ``read_ledger`` contract, applied to tails).
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+import tempfile
+
+__all__ = ["RetuneQueue", "drift_key"]
+
+logger = logging.getLogger(__name__)
+
+
+def drift_key(event: dict) -> str:
+    """The dedup identity of a drifted fit: kernel x hardware x bucket."""
+    return "{}|{}|{}".format(event.get("kernel", "?"), event.get("hw", "?"),
+                             event.get("bucket", "?"))
+
+
+class RetuneQueue:
+    """Durable drift-key queue over one JSON state file."""
+
+    def __init__(self, state_path):
+        self.state_path = str(state_path)
+        self.state = {"offsets": {}, "pending": {}, "done": {},
+                      "failed": {}, "corrupt_lines": 0}
+        doc = None
+        try:
+            with open(self.state_path) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            pass
+        except (OSError, ValueError) as e:
+            # A torn state file must not brick the farm: start fresh (the
+            # worst case is re-ingesting ledgers, which dedup absorbs).
+            logger.warning("retune queue state %s unreadable (%r); "
+                           "starting fresh", self.state_path, e)
+        if isinstance(doc, dict):
+            self.state.update(doc)
+
+    # -- persistence ---------------------------------------------------------
+    def save(self) -> None:
+        d = os.path.dirname(self.state_path) or "."
+        fd, tmp = tempfile.mkstemp(prefix=".tmp.", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.state, f, sort_keys=True)
+                f.flush()
+            os.replace(tmp, self.state_path)
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- ingest --------------------------------------------------------------
+    def ingest(self, ledger_path) -> int:
+        """Tail one flight ledger; returns how many *new* keys were enqueued.
+
+        Only bytes past the stored offset are read, and the offset only
+        advances past complete lines -- a line the serving node is halfway
+        through writing is picked up whole on the next ingest.
+        """
+        path = os.path.abspath(str(ledger_path))
+        offset = int(self.state["offsets"].get(path, 0))
+        try:
+            with open(path, "rb") as f:
+                f.seek(offset)
+                chunk = f.read()
+        except OSError:
+            return 0
+        cut = chunk.rfind(b"\n")
+        if cut < 0:
+            return 0            # no complete new line yet
+        complete, self.state["offsets"][path] = \
+            chunk[:cut + 1], offset + cut + 1
+
+        new_keys = 0
+        for line in complete.decode("utf-8", errors="replace").splitlines():
+            if not line.strip():
+                continue
+            try:
+                event = json.loads(line)
+            except json.JSONDecodeError:
+                self.state["corrupt_lines"] += 1
+                continue
+            if event.get("type") != "drift":
+                continue
+            key = drift_key(event)
+            if key in self.state["done"]:
+                # Already retuned: count the re-drift but do not re-enqueue
+                # automatically (re-queue policy stays with the operator).
+                self.state["done"][key]["re_drifts"] = \
+                    self.state["done"][key].get("re_drifts", 0) + 1
+                continue
+            row = self.state["pending"].get(key)
+            if row is None:
+                self.state["pending"][key] = {"event": event, "n_seen": 1}
+                new_keys += 1
+            else:
+                row["event"] = event        # freshest wins; key deduped
+                row["n_seen"] += 1
+        self.save()
+        return new_keys
+
+    # -- queue ---------------------------------------------------------------
+    def pending(self) -> list[tuple[str, dict]]:
+        """Deduped pending drift keys (sorted: deterministic job order)."""
+        return [(k, self.state["pending"][k]["event"])
+                for k in sorted(self.state["pending"])]
+
+    def mark_done(self, key: str, summary: dict) -> None:
+        row = self.state["pending"].pop(key, None) or {}
+        self.state["done"][key] = {"summary": summary,
+                                   "n_seen": row.get("n_seen", 0)}
+        self.save()
+
+    def mark_failed(self, key: str, error: str) -> None:
+        self.state["pending"].pop(key, None)
+        self.state["failed"][key] = {"error": error}
+        self.save()
+
+    def summary(self) -> dict:
+        return {
+            "pending": len(self.state["pending"]),
+            "done": len(self.state["done"]),
+            "failed": len(self.state["failed"]),
+            "ledgers": len(self.state["offsets"]),
+            "corrupt_lines": self.state["corrupt_lines"],
+            "re_drifts": sum(d.get("re_drifts", 0)
+                             for d in self.state["done"].values()),
+        }

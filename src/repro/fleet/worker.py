@@ -1,0 +1,199 @@
+"""Fleet workers: claim -> execute -> complete over the spool board.
+
+A worker is a pure probe executor: all run-defining state (seeds, budgets,
+strategy names) arrives inside the job payload, so any worker -- or two
+workers at once -- can execute any job and produce bit-identical bytes.
+Heartbeats are claim-file mtimes (``JobBoard.heartbeat``), refreshed
+between probe slices by the device wrapper's ``beat`` callback; the
+coordinator's per-worker ``Watchdog`` watches exactly this channel.
+
+The serve loop is wrapped in ``distributed.fault_tolerance.retry_loop``:
+an unexpected crash *outside* per-job handling (per-job errors are caught
+and recorded on the board) restarts the loop instead of silently losing
+the worker.  ``FaultPlan`` injects the failure modes the tests and the
+bench assert recovery from: a worker that dies mid-job, one that hangs
+mid-job (stops heartbeating), and one that vanishes (abandons its lease
+without crashing the process).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.collect import ChunkedProber, collect, collect_batch
+from repro.distributed.fault_tolerance import retry_loop
+from repro.search import SearchBudget
+
+from .board import JobBoard
+from .jobs import SpecRef, device_from_json, hw_by_name
+
+__all__ = ["FaultPlan", "execute_job", "run_worker"]
+
+
+@dataclass
+class FaultPlan:
+    """Injected worker misbehavior, counted in claimed jobs (1-based).
+
+    ``kill_at_job``    call os._exit mid-job: the process dies holding the
+                       lease (process workers only)
+    ``vanish_at_job``  abandon the claim and exit the loop without
+                       completing (the thread-safe analogue of a kill)
+    ``hang_at_job``    sleep ``hang_s`` mid-job without heartbeating, then
+                       resume -- exercises lease expiry + duplicate-result
+                       dropping when the sleeper eventually finishes
+    """
+
+    kill_at_job: int | None = None
+    vanish_at_job: int | None = None
+    hang_at_job: int | None = None
+    hang_s: float = 0.0
+
+
+def execute_job(job: dict, beat=None) -> dict:
+    """Run one job document; returns the result payload (JSON-able).
+
+    Deterministic by construction: every random stream is derived from
+    seeds in the payload (see ``repro.core.collect``), so re-execution
+    anywhere reproduces the same bytes.
+    """
+    kind = job["kind"]
+    p = job["payload"]
+    spec = SpecRef.from_json(p["spec"]).build()
+    device = device_from_json(p["device"], beat=beat)
+    hw = hw_by_name(p["hw"])
+    budget = (SearchBudget(**p["budget"])
+              if p.get("budget") is not None else None)
+
+    if kind == "batch":
+        shard = collect_batch(
+            spec, device, p["D"], hw=hw, repeats=p["repeats"],
+            max_configs_per_size=p["max_configs_per_size"], seed=p["seed"],
+            batch_index=p["batch_index"], budget=budget,
+            strategy=p.get("strategy"), max_stages=p.get("max_stages", 3),
+            shard_rows=p.get("shard_rows"))
+        return {"shard": shard.to_json()}
+
+    if kind == "kernel":
+        data = collect(
+            spec, device, probe_data=p.get("probe_data"), hw=hw,
+            repeats=p["repeats"],
+            max_configs_per_size=p["max_configs_per_size"], seed=p["seed"],
+            max_stages=p.get("max_stages", 3), strategy=p.get("strategy"),
+            budget=budget, shard_rows=p.get("shard_rows"))
+        return {"data": data.to_json()}
+
+    if kind == "rows":
+        table = spec.candidates(p["D"], hw)
+        tt = spec.traffic_table(p["D"], table, hw)
+        prober = ChunkedProber(device, tt, p["seed"], p["batch_index"],
+                               p["shard_rows"])
+        probe = prober.probe_chunk(
+            np.asarray(p["indices"], dtype=np.int64),
+            np.asarray(p["row_repeats"], dtype=np.int64),
+            p["call_index"], p["chunk_index"])
+        return {"probe": {
+            "total_time_s": probe.total_time_s.tolist(),
+            "mem_time_s": probe.mem_time_s.tolist(),
+            "compute_time_s": probe.compute_time_s.tolist(),
+            "grid_steps": probe.grid_steps.tolist(),
+            "vmem_stage_bytes": probe.vmem_stage_bytes.tolist(),
+            "device_seconds": probe.device_seconds.tolist(),
+            "repeats": probe.repeats.tolist(),
+        }}
+
+    if kind == "retune":
+        return _execute_retune(p, spec, device, hw, budget)
+
+    raise ValueError(f"unknown job kind {kind!r}")
+
+
+def _execute_retune(p: dict, spec, device, hw, budget) -> dict:
+    """Run one drift reaction farm-side.
+
+    The durable outcome is the *versioned cache write-through* (a
+    corrected generation the serving fleet warm-starts/invalidates from);
+    the worker-local registry hot-swap is discarded with the process.
+    The serving node is never touched.
+    """
+    import dataclasses
+
+    from repro.core.cache import DriverCache
+    from repro.core.tuner import Klaraptor
+    from repro.telemetry.config import TelemetryConfig
+    from repro.telemetry.drift import DriftEvent
+    from repro.telemetry.refit import RefitController
+
+    drift = DriftEvent(
+        kernel=p["drift"]["kernel"], hw_name=p["drift"]["hw"],
+        bucket=tuple(), D=dict(p["drift"]["D"]),
+        config=dict(p["drift"]["config"]),
+        rel_error_ewma=float(p["drift"]["rel_error_ewma"]),
+        n_samples=int(p["drift"].get("n_samples", 0)),
+        predicted_s=float(p["drift"].get("predicted_s", 0.0)),
+        observed_s=float(p["drift"].get("observed_s", 0.0)))
+    cfg_kw = dict(p.get("config", {}))
+    if budget is not None:
+        cfg_kw["refit_budget"] = budget    # the farm's per-key budget slice
+    config = TelemetryConfig(**cfg_kw)
+    cache = DriverCache(p["cache_dir"])
+    kl = Klaraptor(device, hw=hw, cache=cache)
+    result = RefitController(kl, config, seed=p["seed"]).refit(spec, drift)
+    out = dataclasses.asdict(result)
+    out["budget"] = dict(result.budget)
+    return {"refit": out}
+
+
+def run_worker(spool, worker_id: str, poll_s: float = 0.02,
+               max_jobs: int | None = None, idle_exit_s: float | None = None,
+               fault: FaultPlan | None = None, max_failures: int = 3) -> int:
+    """Serve jobs from the spool until stopped; returns jobs completed.
+
+    Exits when the board's stop sentinel appears, after ``max_jobs``
+    completions, or after ``idle_exit_s`` with nothing to claim.  The
+    loop itself is retry-wrapped (``retry_loop``): only per-job errors
+    are recorded on the board; loop-level crashes restart the loop.
+    """
+    board = JobBoard(spool)
+    state = {"done": 0, "claimed": 0}
+
+    def _serve(_start: int) -> None:
+        idle_since = time.monotonic()
+        while not board.stop_requested():
+            if max_jobs is not None and state["done"] >= max_jobs:
+                return
+            job = board.claim(worker_id)
+            if job is None:
+                if idle_exit_s is not None and \
+                        time.monotonic() - idle_since > idle_exit_s:
+                    return
+                time.sleep(poll_s)
+                continue
+            idle_since = time.monotonic()
+            state["claimed"] += 1
+            key = job["key"]
+            beat = lambda: board.heartbeat(key, worker_id)  # noqa: E731
+            beat()
+            if fault is not None:
+                if fault.kill_at_job == state["claimed"]:
+                    os._exit(3)         # dies holding the lease
+                if fault.vanish_at_job == state["claimed"]:
+                    return              # abandons the lease, loop exits
+                if fault.hang_at_job == state["claimed"]:
+                    time.sleep(fault.hang_s)    # no heartbeats while asleep
+            t0 = time.monotonic()
+            try:
+                payload = execute_job(job, beat=beat)
+            except Exception as e:      # per-job failure: board bookkeeping
+                board.fail(key, worker_id, repr(e))
+                continue
+            board.complete(key, worker_id, {
+                "ok": True, "wall_seconds": time.monotonic() - t0,
+                "payload": payload})
+            state["done"] += 1
+
+    retry_loop(_serve, lambda: 0, max_failures=max_failures)
+    return state["done"]

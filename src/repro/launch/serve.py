@@ -217,6 +217,8 @@ def main() -> None:
         print(f"flight ledger: {ledger.n_written} events appended to "
               f"{args.ledger}; render with "
               f"python -m repro.launch.status --ledger {args.ledger}")
+        print(f"  (feed drift events to the tuning farm with "
+              f"python -m repro.launch.fleet retune --ledger {args.ledger})")
 
 
 if __name__ == "__main__":

@@ -19,17 +19,18 @@ import sys
 
 from repro.trace import ledger_summary, read_ledger
 
-__all__ = ["main", "render_ledger", "render_snapshot"]
+__all__ = ["main", "render_ledger", "render_snapshot", "section", "table"]
 
 _RULE_WIDTH = 64
 
 
-def _section(title: str) -> list[str]:
+def section(title: str) -> list[str]:
+    """Ruled section header lines (shared by the launch dashboards)."""
     pad = max(_RULE_WIDTH - len(title) - 4, 2)
     return ["", f"== {title} " + "=" * pad]
 
 
-def _table(headers: list[str], rows: list[list[str]]) -> list[str]:
+def table(headers: list[str], rows: list[list[str]]) -> list[str]:
     """Left-align the first column, right-align the rest."""
     widths = [len(h) for h in headers]
     for row in rows:
@@ -40,6 +41,10 @@ def _table(headers: list[str], rows: list[list[str]]) -> list[str]:
         cells += [c.rjust(w) for c, w in zip(row[1:], widths[1:])]
         return "  " + "  ".join(cells).rstrip()
     return [fmt(headers)] + [fmt(r) for r in rows]
+
+
+_section = section      # original private names; other dashboards import these
+_table = table
 
 
 def _fmt_s(seconds: float) -> str:

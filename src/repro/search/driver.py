@@ -41,13 +41,20 @@ from repro.core.kernel_spec import CandidateTable, KernelSpec
 from .budget import BudgetLedger, SearchBudget
 from .strategy import Ask, SearchContext, Strategy, resolve_strategy
 
-__all__ = ["SearchResult", "TableSearchStats", "analytic_cost_hint",
-           "default_budget", "run_search", "search_table"]
+__all__ = ["Prober", "SearchResult", "TableSearchStats",
+           "analytic_cost_hint", "default_budget", "run_search",
+           "search_table"]
 
 Dims = Mapping[str, int]
 
 # observer(indices, probe): collect() hooks this to record fit targets.
 Observer = Callable[[np.ndarray, RowProbe], None]
+
+# prober(indices, repeats) -> RowProbe: replaces the direct
+# ``device.probe_rows(tt.select(idx), rng, reps)`` call.  collect() hooks
+# this to shard probe execution (chunk-seeded noise, fleet row-shard jobs)
+# without the driver knowing; the budget cuts stay driver-side either way.
+Prober = Callable[[np.ndarray, np.ndarray], RowProbe]
 
 
 @dataclass
@@ -132,6 +139,7 @@ def _evaluate(ask: Ask, tt, device: DeviceModel,
               rng: np.random.RandomState, ledger: BudgetLedger,
               cost_hint: np.ndarray | None = None,
               calib: _CostCalibration | None = None,
+              prober: Prober | None = None,
               ) -> tuple[np.ndarray, RowProbe] | None:
     """Probe one proposal under the budget; None if nothing fit at all."""
     idx = np.asarray(ask.indices, dtype=np.int64)
@@ -160,7 +168,10 @@ def _evaluate(ask: Ask, tt, device: DeviceModel,
         keep = pred <= cap
         keep[0] = True
         idx, reps = idx[keep], reps[keep]
-    probe = device.probe_rows(tt.select(idx), rng, reps)
+    if prober is not None:
+        probe = prober(idx, reps)
+    else:
+        probe = device.probe_rows(tt.select(idx), rng, reps)
     if calib is not None and cost_hint is not None:
         calib.update(np.sum(cost_hint[idx] * reps),
                      np.sum(probe.device_seconds))
@@ -194,12 +205,20 @@ def search_table(
     hw: HardwareParams = V5E,
     default_repeats: int = 1,
     observer: Observer | None = None,
+    prober_factory: "Callable[[object], Prober] | None" = None,
 ) -> TableSearchStats:
-    """Run one strategy pass over one candidate table under ``ledger``."""
+    """Run one strategy pass over one candidate table under ``ledger``.
+
+    ``prober_factory(tt)`` (optional) builds the probe executor for this
+    table; by default rows are probed directly through
+    ``device.probe_rows`` with the shared ``rng`` -- the exact legacy
+    draw order, so existing runs are bit-identical.
+    """
     stats = TableSearchStats()
     if not len(table):
         return stats
     tt = spec.traffic_table(D, table, hw)
+    prober = prober_factory(tt) if prober_factory is not None else None
     cost_hint = analytic_cost_hint(tt, hw)
     calib = _CostCalibration()
     # Upper bound on one-repeat rows the remaining budget could ever probe:
@@ -221,7 +240,8 @@ def search_table(
         ask = strategy.ask(ledger)
         if ask is None:
             break
-        out = _evaluate(ask, tt, device, rng, ledger, cost_hint, calib)
+        out = _evaluate(ask, tt, device, rng, ledger, cost_hint, calib,
+                        prober)
         if out is None:
             break
         idx, probe = out

@@ -27,6 +27,7 @@ __all__ = ["SuccessiveHalvingStrategy"]
 @register_strategy
 class SuccessiveHalvingStrategy(Strategy):
     name = "successive_halving"
+    cross_size_state = True     # survivors flow between sizes: no per-size shards
 
     def __init__(self, eta: int = 3, initial_repeats: int = 1,
                  max_repeats: int = 8, max_rounds: int = 4,

@@ -78,6 +78,13 @@ class Strategy:
 
     name = "base"
 
+    # True when the strategy carries decisions *across* probe sizes within
+    # one run (halving survivors, surrogate training data).  Such a run
+    # cannot be sharded per-size: fleet coordinators schedule it as one
+    # whole-kernel job, while stateless-per-size strategies (random, lhs)
+    # shard into independent per-size jobs.
+    cross_size_state = False
+
     def fingerprint(self) -> dict:
         """JSON-able identity folded into driver-cache keys."""
         return {"name": self.name}

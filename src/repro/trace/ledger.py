@@ -19,9 +19,12 @@ by ``python -m repro.launch.status``.
 from __future__ import annotations
 
 import json
+import logging
 import threading
 
 __all__ = ["Ledger", "ledger_summary", "read_ledger"]
+
+logger = logging.getLogger(__name__)
 
 
 class Ledger:
@@ -58,13 +61,18 @@ class Ledger:
         self.close()
 
 
-def read_ledger(path) -> list[dict]:
+def read_ledger(path, strict: bool = False) -> list[dict]:
     """Parse a JSONL ledger back into event dicts.
 
-    A torn final line (process killed mid-write) is skipped rather than
-    poisoning the whole read; a malformed line anywhere else raises.
+    A torn final line (process killed mid-write) is always skipped rather
+    than poisoning the whole read.  By default (``strict=False``) corrupt
+    lines *anywhere* are skipped too, with one warning per read carrying
+    the skip count: the tuning farm's drift-queue ingest must survive a
+    serving node that crashed mid-append and kept writing afterwards.
+    ``strict=True`` restores the hard mode: mid-file corruption raises.
     """
     events: list[dict] = []
+    skipped = 0
     with open(path) as f:
         lines = f.read().splitlines()
     for i, line in enumerate(lines):
@@ -74,8 +82,13 @@ def read_ledger(path) -> list[dict]:
             events.append(json.loads(line))
         except json.JSONDecodeError:
             if i == len(lines) - 1:
-                break
-            raise
+                break           # torn tail: the expected crash shape
+            if strict:
+                raise
+            skipped += 1
+    if skipped:
+        logger.warning("ledger %s: skipped %d corrupt mid-file line(s)",
+                       path, skipped)
     return events
 
 

@@ -194,6 +194,31 @@ class TestFaultTolerance:
         assert not w.fired
         w.stop()
 
+    def test_watchdog_fires_once_until_reset(self):
+        import time
+        fires = []
+        w = Watchdog(timeout_s=0.15, on_timeout=lambda: fires.append(1))
+        w.start()
+        time.sleep(0.5)
+        # fired exactly once despite several timeout windows elapsing
+        assert w.fired and len(fires) == 1
+        w.stop()
+
+    def test_watchdog_rearms_after_reset(self):
+        import time
+        fires = []
+        w = Watchdog(timeout_s=0.15, on_timeout=lambda: fires.append(1))
+        w.start()
+        time.sleep(0.4)
+        assert w.fired and len(fires) == 1
+        w.reset()               # re-arm: a revived worker is watchable again
+        assert not w.fired
+        time.sleep(0.1)
+        assert not w.fired      # reset also refreshed the heartbeat
+        time.sleep(0.4)
+        assert w.fired and len(fires) == 2
+        w.stop()
+
     def test_straggler_monitor(self):
         mon = StragglerMonitor(n_hosts=4, threshold=2.0, patience=2)
         assert mon.observe([1.0, 1.0, 1.0, 1.0]) == []

@@ -1,0 +1,516 @@
+"""Fleet tests: board semantics, farm determinism, faults, retune queue.
+
+The load-bearing claim is *bit-identity*: whatever the farm does --
+however work is partitioned, wherever it lands, whatever dies mid-run --
+the merged dataset, the chosen configs and the cache artifacts must equal
+the single-process ``collect``/``build_driver`` byte for byte.  Faults
+are injected deterministically (``FaultPlan``), never mocked away.
+"""
+
+import glob
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cache import DriverCache
+from repro.core.collect import default_probe_data
+from repro.core.device_model import V5E, V5eSimulator
+from repro.core.tuner import Klaraptor
+from repro.fleet import (FaultPlan, FleetConfig, FleetCoordinator, JobBoard,
+                         RetuneQueue, SpecRef, WallClockSim, collected_equal,
+                         device_from_json, device_to_json, execute_job,
+                         job_key, make_job, tier1_spec_refs)
+from repro.fleet.queue import drift_key
+
+SEED = 3
+N_CFG = 6
+
+
+def _pd(spec, n=2):
+    return default_probe_data(spec)[:n]
+
+
+def _device():
+    return V5eSimulator(V5E, noise=0.04, seed=7)
+
+
+def _artifacts(cache_root):
+    return sorted(os.path.basename(p) for p in glob.glob(
+        os.path.join(cache_root, "**", "*.json"), recursive=True))
+
+
+def _drift_line(**over):
+    d = {"type": "drift", "kernel": "matmul_b16", "hw": "tpu_v5e",
+         "bucket": "m=1024|k=512|n=512",
+         "D": {"m": 1024, "k": 512, "n": 512},
+         "config": {"bm": 512, "bn": 256, "bk": 256},
+         "rel_error_ewma": 0.4, "n_samples": 9,
+         "predicted_s": 1e-3, "observed_s": 1.4e-3}
+    d.update(over)
+    return d
+
+
+class TestJobsAndKeys:
+    def test_job_key_canonical(self):
+        a = job_key("batch", {"x": 1, "y": [2, 3]})
+        b = job_key("batch", {"y": [2, 3], "x": 1})
+        assert a == b and len(a) == 64
+        assert job_key("batch", {"x": 2, "y": [2, 3]}) != a
+        assert job_key("kernel", {"x": 1, "y": [2, 3]}) != a
+
+    def test_make_job_normalizes_payload(self):
+        j1 = make_job("batch", {"D": {"m": np.int64(256)}})
+        j2 = make_job("batch", {"D": {"m": 256}})
+        assert j1.key == j2.key
+
+    def test_spec_ref_roundtrip(self):
+        for name, ref in tier1_spec_refs().items():
+            back = SpecRef.from_json(ref.to_json())
+            assert back.build().name == ref.build().name == name
+
+    def test_device_roundtrip_same_fingerprint(self):
+        dev = _device()
+        back = device_from_json(device_to_json(dev))
+        assert back.fingerprint() == dev.fingerprint()
+
+    def test_wallclock_sim_transparent(self):
+        inner = _device()
+        wc = WallClockSim(inner, scale=0.0)
+        # identical cache identity and identical probe bytes
+        assert wc.fingerprint() == inner.fingerprint()
+        spec = tier1_spec_refs()["matmul_b16"].build()
+        D = _pd(spec)[0]
+        table = spec.candidates(D, V5E)
+        tt = spec.traffic_table(D, table, V5E)
+        idx = np.arange(min(4, len(table)))
+        reps = np.full(idx.shape, 2, dtype=np.int64)
+        p1 = inner.probe_rows(tt.select(idx), np.random.RandomState(0), reps)
+        p2 = wc.probe_rows(tt.select(idx), np.random.RandomState(0), reps)
+        np.testing.assert_array_equal(p1.total_time_s, p2.total_time_s)
+
+    def test_wallclock_sim_beats_while_sleeping(self):
+        beats = []
+        wc = WallClockSim(_device(), scale=0.5, beat=lambda: beats.append(1),
+                          slice_s=0.01)
+        wc._sleep(0.05)
+        assert len(beats) >= 4
+
+
+class TestJobBoard:
+    def _job(self, n=0):
+        return make_job("batch", {"n": n})
+
+    def test_claim_is_exclusive(self, tmp_path):
+        board = JobBoard(tmp_path / "spool")
+        job = self._job()
+        assert board.submit(job) == "jobs"
+        doc = board.claim("w0")
+        assert doc is not None and doc["key"] == job.key
+        assert board.claim("w1") is None
+
+    def test_submit_dedups_against_every_stage(self, tmp_path):
+        board = JobBoard(tmp_path / "spool")
+        job = self._job()
+        board.submit(job)
+        assert board.submit(job) == "jobs"
+        board.claim("w0")
+        assert board.submit(job) == "claimed"
+        board.complete(job.key, "w0", {"ok": True})
+        assert board.submit(job) == "results"
+        assert board.counts() == {"jobs": 0, "claimed": 0, "results": 1,
+                                  "failed": 0}
+
+    def test_duplicate_result_dropped_not_merged(self, tmp_path):
+        board = JobBoard(tmp_path / "spool")
+        job = self._job()
+        board.submit(job)
+        board.claim("w0")
+        assert board.complete(job.key, "w0", {"v": "first"}) is True
+        assert board.complete(job.key, "w1", {"v": "second"}) is False
+        assert board.result(job.key)["v"] == "first"
+
+    def test_fail_requeues_then_parks(self, tmp_path):
+        board = JobBoard(tmp_path / "spool", max_attempts=2)
+        job = self._job()
+        board.submit(job)
+        board.claim("w0")
+        assert board.fail(job.key, "w0", "boom1") == "jobs"
+        board.claim("w1")
+        assert board.fail(job.key, "w1", "boom2") == "failed"
+        doc = board.failure(job.key)
+        assert doc["attempts"] == 2
+        assert [e["error"] for e in doc["errors"]] == ["boom1", "boom2"]
+
+    def test_requeue_stale_expires_only_old_leases(self, tmp_path):
+        board = JobBoard(tmp_path / "spool")
+        j1, j2 = self._job(1), self._job(2)
+        board.submit(j1), board.submit(j2)
+        board.claim("w0")
+        time.sleep(0.15)
+        board.claim("w1")           # fresh lease
+        now = time.time()
+        expired = board.requeue_stale(lease_s=0.1, now=now)
+        assert expired == [min(j1.key, j2.key)] or len(expired) == 1
+        # the expired one is claimable again; the fresh one is not touched
+        assert board.counts()["jobs"] == 1
+        assert board.counts()["claimed"] == 1
+
+    def test_requeue_worker_reassigns_all_its_leases(self, tmp_path):
+        board = JobBoard(tmp_path / "spool")
+        jobs = [self._job(i) for i in range(3)]
+        for j in jobs:
+            board.submit(j)
+        board.claim("dead"), board.claim("dead"), board.claim("alive")
+        requeued = board.requeue_worker("dead", "killed in test")
+        assert len(requeued) == 2
+        assert board.counts() == {"jobs": 2, "claimed": 1, "results": 0,
+                                  "failed": 0}
+
+    def test_requeue_never_resurrects_completed_work(self, tmp_path):
+        board = JobBoard(tmp_path / "spool")
+        job = self._job()
+        board.submit(job)
+        board.claim("w0")
+        board.complete(job.key, "w0", {"ok": True})
+        assert board.requeue_worker("w0") == []
+        assert board.counts()["jobs"] == 0
+
+    def test_speculate_duplicates_lease_first_writer_wins(self, tmp_path):
+        board = JobBoard(tmp_path / "spool")
+        job = self._job()
+        board.submit(job)
+        board.claim("slow")
+        assert board.speculate(job.key) is True
+        assert board.speculate(job.key) is False    # already duplicated
+        dup = board.claim("fast")
+        assert dup["key"] == job.key                # both now hold it
+        assert board.complete(job.key, "fast", {"by": "fast"}) is True
+        assert board.complete(job.key, "slow", {"by": "slow"}) is False
+        assert board.result(job.key)["by"] == "fast"
+
+    def test_claim_drops_stale_duplicate_of_finished_job(self, tmp_path):
+        board = JobBoard(tmp_path / "spool")
+        job = self._job()
+        board.submit(job)
+        board.claim("slow")
+        board.speculate(job.key)
+        board.complete(job.key, "slow", {"ok": True})
+        # the speculative copy must not be handed out after the result
+        assert board.claim("fast") is None
+        assert board.counts()["jobs"] == 0
+
+    def test_stop_sentinel(self, tmp_path):
+        board = JobBoard(tmp_path / "spool")
+        assert not board.stop_requested()
+        board.request_stop()
+        assert board.stop_requested()
+        board.clear_stop()
+        assert not board.stop_requested()
+
+
+class TestFarmDeterminism:
+    """The acceptance gate: farm output == single-process output, bytes."""
+
+    def _single(self, cache_dir, name, **kw):
+        ref = tier1_spec_refs()[name]
+        spec = ref.build()
+        kl = Klaraptor(_device(), hw=V5E, cache=DriverCache(str(cache_dir)))
+        return kl.build_driver(spec, probe_data=_pd(spec),
+                               max_configs_per_size=N_CFG, seed=SEED,
+                               repeats=2, **kw)
+
+    def _assert_parity(self, sp, fb, spec):
+        assert collected_equal(sp.collected, fb.collected) == []
+        D = default_probe_data(spec)[-1]
+        assert sp.driver.choose(D) == fb.driver.choose(D)
+
+    def test_all_tier1_under_faults_bit_identical(self, tmp_path):
+        """4 workers; one vanishes on its first job, one hangs past its
+        lease (-> reassignment + a duplicate completion when it wakes).
+        All four tier-1 kernels, one farm run, every byte identical."""
+        refs = tier1_spec_refs()
+        singles = {n: self._single(tmp_path / "c1", n) for n in refs}
+        pd = {n: _pd(r.build()) for n, r in refs.items()}
+        faults = {0: FaultPlan(vanish_at_job=1),
+                  1: FaultPlan(hang_at_job=1, hang_s=1.5)}
+        with FleetCoordinator(
+                tmp_path / "spool", _device(), hw=V5E,
+                cache=DriverCache(str(tmp_path / "c2")),
+                config=FleetConfig(n_workers=4, lease_s=0.4,
+                                   job_timeout_s=120),
+                worker_faults=faults) as fc:
+            out = fc.tune(refs, probe_data=pd, repeats=2,
+                          max_configs_per_size=N_CFG, seed=SEED)
+            stats = fc.stats
+        for name, ref in refs.items():
+            self._assert_parity(singles[name], out[name], ref.build())
+        assert _artifacts(tmp_path / "c1") == _artifacts(tmp_path / "c2")
+        # the faults actually happened and were recovered from
+        assert stats.worker_deaths >= 1      # the vanished worker
+        assert stats.requeues >= 1           # the hung worker's lease
+        assert stats.respawns >= 1
+
+    def test_kernel_mode_cross_size_strategy(self, tmp_path):
+        name = "matmul_b16"
+        sp = self._single(tmp_path / "c1", name,
+                          strategy="successive_halving")
+        ref = tier1_spec_refs()[name]
+        with FleetCoordinator(
+                tmp_path / "spool", _device(), hw=V5E,
+                cache=DriverCache(str(tmp_path / "c2")),
+                config=FleetConfig(n_workers=2)) as fc:
+            fb = fc.tune({name: ref}, probe_data=_pd(ref.build()),
+                         repeats=2, max_configs_per_size=N_CFG, seed=SEED,
+                         strategy="successive_halving")[name]
+            assert fc.stats.by_kind == {"kernel": 1}
+        self._assert_parity(sp, fb, ref.build())
+        assert _artifacts(tmp_path / "c1") == _artifacts(tmp_path / "c2")
+
+    def test_batch_mode_refuses_cross_size_strategy(self, tmp_path):
+        ref = tier1_spec_refs()["matmul_b16"]
+        with FleetCoordinator(tmp_path / "spool", _device(),
+                              config=FleetConfig(n_workers=0)) as fc:
+            with pytest.raises(ValueError, match="cross-size state"):
+                fc.tune({"matmul_b16": ref}, mode="batch",
+                        strategy="successive_halving")
+
+    def test_rows_mode_finest_grain(self, tmp_path):
+        name = "matmul_b16"
+        sp = self._single(tmp_path / "c1", name, shard_rows=4)
+        ref = tier1_spec_refs()[name]
+        with FleetCoordinator(
+                tmp_path / "spool", _device(), hw=V5E,
+                cache=DriverCache(str(tmp_path / "c2")),
+                config=FleetConfig(n_workers=3)) as fc:
+            fb = fc.tune({name: ref}, probe_data=_pd(ref.build()),
+                         repeats=2, max_configs_per_size=N_CFG, seed=SEED,
+                         shard_rows=4, mode="rows")[name]
+            assert set(fc.stats.by_kind) == {"rows"}
+            assert fc.stats.by_kind["rows"] >= 2
+        self._assert_parity(sp, fb, ref.build())
+        assert _artifacts(tmp_path / "c1") == _artifacts(tmp_path / "c2")
+
+    @pytest.mark.slow
+    def test_killed_process_worker_recovered(self, tmp_path):
+        """A real os._exit mid-job (process backend): the lease expires,
+        the job is reassigned, and the merge stays bit-identical."""
+        name = "matmul_b16"
+        sp = self._single(tmp_path / "c1", name)
+        ref = tier1_spec_refs()[name]
+        # One worker: it *must* claim the first job and die holding the
+        # lease; the respawned replacement finishes everything.
+        with FleetCoordinator(
+                tmp_path / "spool", _device(), hw=V5E,
+                cache=DriverCache(str(tmp_path / "c2")),
+                config=FleetConfig(n_workers=1, backend="process",
+                                   lease_s=0.5, job_timeout_s=120),
+                worker_faults={0: FaultPlan(kill_at_job=1)}) as fc:
+            fb = fc.tune({name: ref}, probe_data=_pd(ref.build()),
+                         repeats=2, max_configs_per_size=N_CFG,
+                         seed=SEED)[name]
+            assert fc.stats.worker_deaths >= 1
+        self._assert_parity(sp, fb, ref.build())
+
+    def test_duplicate_execution_is_bit_identical(self):
+        """The idempotence the whole design leans on: the same job
+        document executes to the same bytes anywhere, any time."""
+        ref = tier1_spec_refs()["matmul_b16"]
+        spec = ref.build()
+        job = make_job("batch", {
+            "spec": ref.to_json(), "device": device_to_json(_device()),
+            "hw": "tpu_v5e", "seed": SEED, "repeats": 2,
+            "max_configs_per_size": N_CFG, "strategy": None,
+            "max_stages": 3, "shard_rows": None,
+            "D": {k: int(v) for k, v in _pd(spec)[0].items()},
+            "batch_index": 0, "budget": {"max_executions": 12,
+                                         "max_device_seconds": None}})
+        r1 = execute_job(job.to_json())
+        r2 = execute_job(job.to_json())
+        assert json.dumps(r1, sort_keys=True) == \
+            json.dumps(r2, sort_keys=True)
+
+
+class TestRetuneQueue:
+    def test_ingest_dedup_and_corrupt_counting(self, tmp_path):
+        ledger = tmp_path / "flight.jsonl"
+        lines = [json.dumps({"type": "choice", "kernel": "matmul_b16"}),
+                 json.dumps(_drift_line()),
+                 "{not json",
+                 json.dumps(_drift_line(rel_error_ewma=0.6)),
+                 json.dumps(_drift_line(kernel="moe_gmm_b16"))]
+        ledger.write_text("\n".join(lines) + "\n")
+        q = RetuneQueue(tmp_path / "state.json")
+        assert q.ingest(ledger) == 2        # two distinct keys
+        s = q.summary()
+        assert s["pending"] == 2 and s["corrupt_lines"] == 1
+        pend = dict(q.pending())
+        key = drift_key(_drift_line())
+        assert pend[key]["rel_error_ewma"] == 0.6   # freshest event wins
+        assert q.state["pending"][key]["n_seen"] == 2
+
+    def test_offsets_only_advance_past_complete_lines(self, tmp_path):
+        ledger = tmp_path / "flight.jsonl"
+        q = RetuneQueue(tmp_path / "state.json")
+        with open(ledger, "w") as f:
+            f.write(json.dumps(_drift_line()) + "\n")
+            f.write('{"type": "drift", "kernel": "moe')   # torn mid-write
+        assert q.ingest(ledger) == 1
+        with open(ledger, "a") as f:        # the serving node finishes it
+            f.write('_gmm_b16", "hw": "tpu_v5e", "bucket": "g=512"}\n')
+        assert q.ingest(ledger) == 1        # whole line seen exactly once
+        assert q.summary()["pending"] == 2
+        assert q.summary()["corrupt_lines"] == 0
+
+    def test_state_survives_restart(self, tmp_path):
+        ledger = tmp_path / "flight.jsonl"
+        ledger.write_text(json.dumps(_drift_line()) + "\n")
+        q = RetuneQueue(tmp_path / "state.json")
+        q.ingest(ledger)
+        q2 = RetuneQueue(tmp_path / "state.json")   # restart
+        assert q2.summary()["pending"] == 1
+        assert q2.ingest(ledger) == 0               # offset persisted
+
+    def test_done_keys_count_re_drifts_not_requeue(self, tmp_path):
+        ledger = tmp_path / "flight.jsonl"
+        ledger.write_text(json.dumps(_drift_line()) + "\n")
+        q = RetuneQueue(tmp_path / "state.json")
+        q.ingest(ledger)
+        key = q.pending()[0][0]
+        q.mark_done(key, {"succeeded": True})
+        with open(ledger, "a") as f:
+            f.write(json.dumps(_drift_line()) + "\n")
+        assert q.ingest(ledger) == 0
+        assert q.summary()["re_drifts"] == 1
+        assert q.summary()["pending"] == 0
+
+    def test_unreadable_state_starts_fresh(self, tmp_path):
+        state = tmp_path / "state.json"
+        state.write_text("{torn")
+        q = RetuneQueue(state)
+        assert q.summary()["pending"] == 0
+
+
+class TestRetuneEndToEnd:
+    @pytest.mark.slow
+    def test_ledger_to_versioned_cache_without_touching_serving(
+            self, tmp_path):
+        """Drift key -> farm probe -> refit -> versioned write-through; the
+        coordinator process's registry (the 'serving' side here, thanks to
+        the process backend) never sees the swap."""
+        from repro.core.driver import registry
+        from repro.search import SearchBudget
+
+        cache = DriverCache(str(tmp_path / "cache"))
+        refs = tier1_spec_refs()
+        spec = refs["matmul_b16"].build()
+        kl = Klaraptor(_device(), hw=V5E, cache=cache)
+        kl.build_driver(spec, probe_data=_pd(spec), repeats=2,
+                        max_configs_per_size=N_CFG, seed=SEED,
+                        register=False)
+        v0 = _artifacts(tmp_path / "cache")
+        ledger = tmp_path / "flight.jsonl"
+        ledger.write_text(json.dumps(_drift_line()) + "\n")
+        q = RetuneQueue(tmp_path / "state.json")
+        assert q.ingest(ledger) == 1
+        gen_before = registry.generation
+        with FleetCoordinator(
+                tmp_path / "spool", _device(), hw=V5E, cache=cache,
+                config=FleetConfig(n_workers=2, backend="process",
+                                   job_timeout_s=120)) as fc:
+            outcomes = fc.retune(
+                q, refs, budget=SearchBudget(max_executions=600), seed=SEED)
+        assert registry.generation == gen_before    # serving untouched
+        assert len(outcomes) == 1 and outcomes[0]["succeeded"]
+        assert outcomes[0]["cache_version"] >= 1
+        assert q.summary() == {**q.summary(), "done": 1, "pending": 0}
+        # the durable outcome: a new artifact generation in the cache
+        assert _artifacts(tmp_path / "cache") != v0
+
+    def test_unknown_kernel_marked_failed(self, tmp_path):
+        ledger = tmp_path / "flight.jsonl"
+        ledger.write_text(
+            json.dumps(_drift_line(kernel="no_such_kernel")) + "\n")
+        q = RetuneQueue(tmp_path / "state.json")
+        q.ingest(ledger)
+        with FleetCoordinator(tmp_path / "spool", _device(),
+                              cache=DriverCache(str(tmp_path / "cache")),
+                              config=FleetConfig(n_workers=0)) as fc:
+            assert fc.retune(q, tier1_spec_refs()) == []
+        assert q.summary()["failed"] == 1
+
+
+class TestCacheAtomicity:
+    def test_concurrent_same_key_puts_never_tear(self, tmp_path):
+        """Hammer one entry from many threads while readers poll: every
+        read sees a complete JSON document, and no temp files leak."""
+        cache = DriverCache(str(tmp_path / "cache"))
+        spec = tier1_spec_refs()["matmul_b16"].build()
+        kl = Klaraptor(_device(), hw=V5E, cache=cache)
+        built = kl.build_driver(spec, probe_data=_pd(spec), repeats=2,
+                                max_configs_per_size=N_CFG, seed=SEED,
+                                register=False)
+        paths = glob.glob(os.path.join(str(tmp_path / "cache"), "**",
+                                       "*.json"), recursive=True)
+        assert len(paths) == 1
+        doc = json.load(open(paths[0]))
+        stop = threading.Event()
+        torn = []
+
+        def reader():
+            while not stop.is_set():
+                try:
+                    json.load(open(paths[0]))
+                except ValueError as e:
+                    torn.append(repr(e))
+
+        def writer():
+            for _ in range(50):
+                from repro.core.cache import _write_json_atomic
+                _write_json_atomic(paths[0], doc)
+
+        threads = [threading.Thread(target=reader) for _ in range(2)] + \
+                  [threading.Thread(target=writer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        time.sleep(0.3)
+        stop.set()
+        for t in threads:
+            t.join(timeout=5)
+        assert torn == []
+        leftovers = [p for p in os.listdir(os.path.dirname(paths[0]))
+                     if p.endswith(".tmp")]
+        assert leftovers == []
+        assert built is not None
+
+
+class TestFleetCLI:
+    def test_status_with_nothing_to_show(self, capsys):
+        from repro.launch.fleet import main
+        assert main(["status"]) == 1
+
+    def test_tune_cli_smoke(self, tmp_path, capsys):
+        from repro.launch.fleet import main
+        rc = main(["tune", "--spool", str(tmp_path / "spool"),
+                   "--workers", "2", "--kernels", "matmul_b16",
+                   "--max-configs-per-size", "4", "--repeats", "2",
+                   "--cache", str(tmp_path / "cache")])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "matmul_b16" in out and "farmed" in out
+
+    def test_worker_id_with_dot_rejected(self, tmp_path):
+        from repro.launch.fleet import main
+        with pytest.raises(SystemExit):
+            main(["worker", "--spool", str(tmp_path / "spool"),
+                  "--id", "bad.id"])
+
+    def test_retune_cli_empty_queue(self, tmp_path, capsys):
+        from repro.launch.fleet import main
+        rc = main(["retune", "--spool", str(tmp_path / "spool"),
+                   "--state", str(tmp_path / "state.json")])
+        assert rc == 0
+        assert "nothing pending" in capsys.readouterr().out

@@ -307,11 +307,20 @@ class TestLedger:
         s2 = ledger_summary(events + [extra])
         assert s2["choices_total"] == s["choices_total"] + 64
 
-    def test_mid_file_corruption_raises(self, tmp_path):
+    def test_mid_file_corruption_strict_vs_lenient(self, tmp_path):
         path = tmp_path / "bad.jsonl"
         path.write_text('{"type": "choice"}\nnot json\n{"type": "probe"}\n')
+        # Default is lenient: corrupt mid-file lines are skipped (counted
+        # in a warning), the good lines survive -- what the fleet's
+        # drift-queue ingest relies on.
+        events = read_ledger(path)
+        assert [e["type"] for e in events] == ["choice", "probe"]
         with pytest.raises(json.JSONDecodeError):
-            read_ledger(path)
+            read_ledger(path, strict=True)
+        # A torn *tail* is tolerated even in strict mode.
+        path.write_text('{"type": "choice"}\n{"type": "torn')
+        assert [e["type"] for e in read_ledger(path, strict=True)] == \
+            ["choice"]
 
     def test_tracer_spans_reach_ledger(self, tmp_path):
         path = tmp_path / "spans.jsonl"

@@ -25,6 +25,11 @@ Prints ``name,us_per_call,derived`` CSV lines:
               kill/hang fault recovery with bit-identical merges, and the
               ledger->retune->cache pipeline (BENCH_fleet.json); prints
               fleet/skipped if the demo cannot run here
+  serving -- bucketed in-graph dispatch (one trace over >= 32 raw shapes,
+              bucket configs bit-identical to host choose()) and the async
+              continuous-batching front-end vs the sync engine
+              (BENCH_serving.json); prints serving/skipped if the demo
+              cannot run here
 """
 
 from __future__ import annotations
@@ -91,6 +96,14 @@ def main() -> None:
             print(line, flush=True)
     except Exception as e:
         print(f"fleet/skipped,0,{e!r}", flush=True)
+    # Trailing: the bucketed-dispatch / async-serving gates must not mask
+    # the benches above (and vice versa).
+    try:
+        from benchmarks import bench_serving
+        for line in bench_serving.main([]):
+            print(line, flush=True)
+    except Exception as e:
+        print(f"serving/skipped,0,{e!r}", flush=True)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,7 @@
 Public API re-exports.  See DESIGN.md for the paper-to-TPU mapping.
 """
 
+from .buckets import BucketLattice, pad_to, pow2_span
 from .cache import (
     CacheEntry, DriverCache, PlanEntry, cache_key, default_cache,
     default_cache_dir, spec_fingerprint,
@@ -12,7 +13,9 @@ from .device_model import (
     ProbeBatch, ProbeRecord, RowProbe, TrafficOperand, TrafficTable,
     V5eSimulator, dtype_bytes,
 )
-from .device_plan import DevicePlanTable, pack_shape32
+from .device_plan import (
+    BucketedDispatch, DevicePlanTable, build_bucketed_dispatch, pack_shape32,
+)
 from .driver import (
     ChoiceEvent, DriverProgram, WarmStartSummary, choose_or_default, dkey,
     get_choice_listener, get_driver, memo_key, register_driver, registry,
@@ -45,6 +48,7 @@ from .tuner import (
 )
 
 __all__ = [
+    "BucketLattice", "pad_to", "pow2_span",
     "CacheEntry", "DriverCache", "PlanEntry", "cache_key", "default_cache",
     "default_cache_dir", "spec_fingerprint",
     "DTYPE_BYTES", "V5E", "V5P", "DeviceModel", "HardwareParams",
@@ -55,7 +59,8 @@ __all__ = [
     "register_driver",
     "registry", "set_choice_listener", "set_decision_memo",
     "warm_start_from_cache",
-    "DevicePlanTable", "pack_shape32",
+    "BucketedDispatch", "DevicePlanTable", "build_bucketed_dispatch",
+    "pack_shape32",
     "KernelRequest", "StepPlan", "active_step_plan", "build_step_plan",
     "use_step_plan",
     "FitResult", "fit_auto", "fit_polynomial", "fit_rational",

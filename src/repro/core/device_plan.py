@@ -28,10 +28,22 @@ The device table is content-identical to its source: ``lookup_dims``
 (host-convenience wrapper) returns bit-identical configs to
 ``LaunchPlanTable.lookup`` for every shape, hit or miss; tests enforce
 this on all tier-1 kernels.
+
+``BucketedDispatch`` is the consumer that closes ROADMAP item 2: it pairs
+a ``core.buckets.BucketLattice`` with the device table so a jitted step
+can take *raw* dims as traced values, round them to the bucket in-graph,
+gather the bucket's config row, and turn the gathered row into a branch
+index over the table's small static config set -- ``jax.lax.switch``
+over per-config kernel launches, with an out-of-range or unplanned
+bucket landing on the trailing default branch.  One compiled step then
+serves every shape the lattice covers, and a shape it does not cover
+still executes (default config) without a retrace.
 """
 
 from __future__ import annotations
 
+import logging
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Mapping, Sequence
@@ -41,9 +53,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .buckets import BucketLattice
 from .plan import LaunchPlanTable
 
-__all__ = ["DevicePlanTable", "pack_shape32"]
+__all__ = ["BucketedDispatch", "DevicePlanTable", "build_bucketed_dispatch",
+           "pack_shape32"]
+
+logger = logging.getLogger(__name__)
 
 Dims = Mapping[str, int]
 
@@ -225,3 +241,177 @@ class DevicePlanTable:
 
     def __len__(self) -> int:
         return self.n_entries
+
+
+@dataclass(frozen=True)
+class BucketedDispatch:
+    """In-graph bucketed config dispatch for one kernel.
+
+    The pieces: a ``BucketLattice`` (raw dims -> bucket keys, identical
+    host/graph rounding), the bucket plan lowered to a ``DevicePlanTable``
+    (bucket keys -> config row, in-graph gather), and the table's
+    *distinct* config rows frozen as a static tuple.  ``branch_index``
+    composes them inside the graph: gathered row -> index into the static
+    set, with the trailing index (``len(configs)``) reserved for the
+    default branch -- taken on an out-of-range raw shape, an unplanned
+    bucket, or (empty table, no driver) always.
+
+    A ``jax.lax.switch`` over ``n_branches`` callables, each launching the
+    kernel with one static config, is then shape-stable: new raw shapes
+    move the *index*, never the trace.  ``host_config`` replays the exact
+    graph decision on the host -- the bit-identity surface the serving
+    bench gates on, and what the engine's per-step bucket stats use.
+    """
+
+    lattice: BucketLattice
+    table: DevicePlanTable
+    configs: tuple[tuple[int, ...], ...]
+    default: tuple[int, ...]
+    program_params: tuple[str, ...]
+
+    @classmethod
+    def build(cls, lattice: BucketLattice,
+              table: "LaunchPlanTable | DevicePlanTable",
+              default: Mapping[str, int]) -> "BucketedDispatch":
+        """Freeze one plan table (host or device form) into a dispatch.
+
+        The static config set is the table's distinct config rows, sorted
+        for determinism -- for a tuned kernel over a handful of buckets
+        this is small (often smaller than the bucket count: nearby buckets
+        share configs), which is what keeps the switch cheap.
+        """
+        if isinstance(table, LaunchPlanTable):
+            table = table.to_device()
+        if tuple(lattice.data_params) != tuple(table.data_params):
+            raise ValueError(
+                f"bucket lattice params {lattice.data_params} do not match "
+                f"plan table params {table.data_params} for "
+                f"{table.kernel}")
+        occupied = np.asarray(table.occupied)
+        rows = np.asarray(table.rows)[occupied]
+        distinct = sorted({tuple(int(v) for v in r) for r in rows})
+        default_row = tuple(int(default[p]) for p in table.program_params)
+        return cls(lattice=lattice, table=table,
+                   configs=tuple(distinct), default=default_row,
+                   program_params=tuple(table.program_params))
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def n_branches(self) -> int:
+        return len(self.configs) + 1
+
+    def config_dicts(self) -> list[dict[str, int]]:
+        """One config dict per switch branch, default branch last."""
+        out = [dict(zip(self.program_params, c)) for c in self.configs]
+        out.append(dict(zip(self.program_params, self.default)))
+        return out
+
+    def raw_keys(self, dims) -> jnp.ndarray:
+        """Normalize raw dims (mapping or array-like) to the (n_params,)
+        int32 key vector in lattice order."""
+        if isinstance(dims, Mapping):
+            return jnp.stack([jnp.asarray(dims[d], dtype=jnp.int32)
+                              for d in self.lattice.data_params])
+        return jnp.asarray(dims, dtype=jnp.int32)
+
+    # -- the in-graph hot path ------------------------------------------------
+    def branch_index(self, dims) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Jit-traceable: raw dims -> (switch branch index int32, hit bool).
+
+        Bucket the raw dims, gather the bucket's row from the device
+        table, and match the gathered row against the static config set.
+        Every step is a masked compare -- no data-dependent control flow
+        -- and a miss of any kind yields index ``len(configs)`` (the
+        default branch), so the caller's ``lax.switch`` is total.
+        """
+        raw = self.raw_keys(dims)
+        keys, in_range = self.lattice.bucket_keys(raw)
+        row, found = self.table.lookup(keys)
+        hit = found & in_range
+        idx = jnp.full((), len(self.configs), dtype=jnp.int32)
+        for i, cfg in enumerate(self.configs):
+            match = hit & jnp.all(row == jnp.asarray(cfg, dtype=jnp.int32))
+            idx = jnp.where(match, jnp.int32(i), idx)
+        return idx, hit
+
+    # -- host replay ----------------------------------------------------------
+    def host_index(self, D: Mapping[str, int]) -> tuple[int, bool]:
+        """The exact decision ``branch_index`` makes, replayed on the host
+        (bucket via ``bucket_of``, row via ``lookup_dims`` -- both proven
+        bit-identical to their graph forms)."""
+        bucket = self.lattice.bucket_of(D)
+        if bucket is None:
+            return len(self.configs), False
+        cfg = self.table.lookup_dims(bucket)
+        if cfg is None:
+            return len(self.configs), False
+        row = tuple(int(cfg[p]) for p in self.program_params)
+        try:
+            return self.configs.index(row), True
+        except ValueError:          # unreachable: configs spans the table
+            return len(self.configs), False
+
+    def host_config(self, D: Mapping[str, int]) -> tuple[dict[str, int], bool]:
+        """(config the graph will launch with, bucket hit?) for raw ``D``."""
+        idx, hit = self.host_index(D)
+        return self.config_dicts()[idx], hit
+
+    def observe(self, D: Mapping[str, int], n_coalesced: int = 1
+                ) -> tuple[bool, float]:
+        """Host-side accounting for one graph dispatch of raw shape ``D``.
+
+        Returns (bucket hit?, padding-waste fraction) and emits one
+        ``ChoiceEvent`` with ``source="bucket"`` to the process-wide
+        choice listener -- the in-graph path makes its decision inside the
+        compiled step where telemetry cannot see it, so the engine replays
+        it here at step granularity (cheap: a bisect and a table probe).
+        """
+        cfg, hit = self.host_config(D)
+        waste = self.lattice.padding_waste(D) if hit else 0.0
+        from .driver import ChoiceEvent, get_choice_listener
+
+        listener = get_choice_listener()
+        if listener is not None:
+            try:
+                listener(ChoiceEvent(
+                    kernel=self.table.kernel, D=dict(D), config=dict(cfg),
+                    source="bucket" if hit else "default",
+                    predicted_s=None, hw_name=self.table.hw_name,
+                    n_coalesced=n_coalesced, t_ns=time.monotonic_ns()))
+            except Exception:
+                logger.warning("choice listener raised during bucket "
+                               "observe; event dropped", exc_info=True)
+        return hit, waste
+
+
+def build_bucketed_dispatch(kernel: str, lattice: BucketLattice,
+                            default: Mapping[str, int], hw=None,
+                            cache: bool = True,
+                            margin: float = 0.02) -> BucketedDispatch:
+    """Compile (or load) the lattice's launch plan and freeze it for
+    in-graph dispatch.
+
+    One ``precompile_plans`` pass over the lattice envelope gives a plan
+    table covering every bucket the driver finds feasible (persisted
+    through the artifact cache like any plan); the registered table is
+    then lowered and frozen.  With no driver for ``kernel`` the table is
+    empty and every shape takes the default branch -- still never a
+    retrace, which is the contract callers rely on.
+    """
+    from .device_model import V5E
+    from .driver import registry
+    from .plan import precompile_plans
+
+    hw = hw if hw is not None else V5E
+    precompile_plans({kernel: lattice.envelope()}, hw=hw, cache=cache,
+                     margin=margin)
+    plan = registry.plan(kernel, hw.name)
+    if plan is None:
+        program_params = tuple(default)
+        plan = LaunchPlanTable.build(
+            kernel, hw.name, lattice.data_params, program_params,
+            shapes={d: np.zeros(0, dtype=np.int64)
+                    for d in lattice.data_params},
+            configs={p: np.zeros(0, dtype=np.int64)
+                     for p in program_params})
+    return BucketedDispatch.build(lattice, plan, default)

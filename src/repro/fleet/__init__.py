@@ -28,7 +28,7 @@ from .jobs import (ProbeJob, SpecRef, WallClockSim, device_from_json,
                    device_to_json, hw_by_name, job_key, make_job,
                    tier1_spec_refs)
 from .merge import collected_equal, merge_batch_results, merge_kernel_result
-from .queue import RetuneQueue, drift_key
+from .queue import RetuneQueue, drift_key, traffic_key
 from .worker import FaultPlan, execute_job, run_worker
 
 __all__ = [
@@ -45,6 +45,7 @@ __all__ = [
     "device_from_json",
     "device_to_json",
     "drift_key",
+    "traffic_key",
     "execute_job",
     "hw_by_name",
     "job_key",

@@ -10,10 +10,21 @@ instead of stealing device-seconds from live serving.
 
 The state file is one atomic JSON document: offsets, pending keys (with
 the freshest drift event per key), done keys (with the refit summary),
-failures.  Ingest is idempotent -- re-reading a ledger only consumes
-bytes past the stored offset, and a key already pending or done only
-bumps its counters.  Corrupt mid-file lines are skipped and counted
-(the lenient ``read_ledger`` contract, applied to tails).
+failures, and per-key traffic tallies.  Ingest is idempotent --
+re-reading a ledger only consumes bytes past the stored offset, and a
+key already pending or done only bumps its counters.  Corrupt mid-file
+lines are skipped and counted (the lenient ``read_ledger`` contract,
+applied to tails).
+
+Drain order is *priority*, not FIFO: the farm's device-seconds should go
+where they buy the most, so ``pending()`` ranks keys by drift-EWMA
+magnitude weighted by ledger traffic volume (``choice`` events tallied
+per key during the same ingest pass -- a badly-drifted kernel nobody
+launches ranks below a mildly-drifted hot path).  Done keys that keep
+re-drifting re-enqueue themselves automatically once they trip
+``requeue_after`` re-drifts (default 2): one stray drift event after a
+refit stays an operator decision, a pattern of them means the refit did
+not take.
 """
 
 from __future__ import annotations
@@ -23,7 +34,7 @@ import logging
 import os
 import tempfile
 
-__all__ = ["RetuneQueue", "drift_key"]
+__all__ = ["RetuneQueue", "drift_key", "traffic_key"]
 
 logger = logging.getLogger(__name__)
 
@@ -34,13 +45,31 @@ def drift_key(event: dict) -> str:
                              event.get("bucket", "?"))
 
 
+def traffic_key(event: dict) -> str:
+    """Traffic-tally identity of a ledger ``choice`` line.
+
+    Choice lines carry raw ``D`` rather than a precomputed bucket label;
+    bucketing it with the recorder's own log2 arithmetic makes traffic
+    keys line up with the drift keys the telemetry loop writes (both go
+    through ``bucket_label(shape_bucket(D))``).
+    """
+    bucket = event.get("bucket")
+    if bucket is None and isinstance(event.get("D"), dict):
+        from repro.telemetry.record import bucket_label, shape_bucket
+        bucket = bucket_label(shape_bucket(event["D"]))
+    return "{}|{}|{}".format(event.get("kernel", "?"), event.get("hw", "?"),
+                             bucket if bucket is not None else "?")
+
+
 class RetuneQueue:
     """Durable drift-key queue over one JSON state file."""
 
-    def __init__(self, state_path):
+    def __init__(self, state_path, requeue_after: int = 2):
         self.state_path = str(state_path)
+        self.requeue_after = max(1, int(requeue_after))
         self.state = {"offsets": {}, "pending": {}, "done": {},
-                      "failed": {}, "corrupt_lines": 0}
+                      "failed": {}, "traffic": {}, "requeued": 0,
+                      "corrupt_lines": 0}
         doc = None
         try:
             with open(self.state_path) as f:
@@ -102,14 +131,31 @@ class RetuneQueue:
             except json.JSONDecodeError:
                 self.state["corrupt_lines"] += 1
                 continue
-            if event.get("type") != "drift":
+            etype = event.get("type")
+            if etype == "choice":
+                # Traffic tally: how many launches each key actually
+                # serves, the weight side of the drain priority.
+                tk = traffic_key(event)
+                self.state["traffic"][tk] = (
+                    self.state["traffic"].get(tk, 0)
+                    + int(event.get("n_coalesced") or 1))
+                continue
+            if etype != "drift":
                 continue
             key = drift_key(event)
             if key in self.state["done"]:
-                # Already retuned: count the re-drift but do not re-enqueue
-                # automatically (re-queue policy stays with the operator).
-                self.state["done"][key]["re_drifts"] = \
-                    self.state["done"][key].get("re_drifts", 0) + 1
+                # Already retuned: one stray re-drift is counted but left
+                # to the operator; a *pattern* of them (>= requeue_after)
+                # means the refit did not take, so the key re-enqueues
+                # itself.
+                done = self.state["done"][key]
+                done["re_drifts"] = done.get("re_drifts", 0) + 1
+                if done["re_drifts"] < self.requeue_after:
+                    continue
+                self.state["done"].pop(key)
+                self.state["requeued"] = self.state.get("requeued", 0) + 1
+                self.state["pending"][key] = {"event": event, "n_seen": 1}
+                new_keys += 1
                 continue
             row = self.state["pending"].get(key)
             if row is None:
@@ -122,10 +168,27 @@ class RetuneQueue:
         return new_keys
 
     # -- queue ---------------------------------------------------------------
+    def priority(self, key: str) -> float:
+        """Drain priority: drift magnitude x (1 + ledger traffic weight).
+
+        The EWMA says how wrong the fit is, the traffic tally says how
+        often that wrongness is paid; a key with no recorded traffic
+        still drains on magnitude alone (the +1).
+        """
+        row = self.state["pending"].get(key)
+        if row is None:
+            return 0.0
+        ewma = row["event"].get("rel_error_ewma")
+        mag = abs(float(ewma)) if ewma is not None else 0.0
+        weight = float(self.state.get("traffic", {}).get(key, 0))
+        return mag * (1.0 + weight)
+
     def pending(self) -> list[tuple[str, dict]]:
-        """Deduped pending drift keys (sorted: deterministic job order)."""
-        return [(k, self.state["pending"][k]["event"])
-                for k in sorted(self.state["pending"])]
+        """Deduped pending drift keys, highest priority first (key-sorted
+        within ties: deterministic job order)."""
+        keys = sorted(self.state["pending"],
+                      key=lambda k: (-self.priority(k), k))
+        return [(k, self.state["pending"][k]["event"]) for k in keys]
 
     def mark_done(self, key: str, summary: dict) -> None:
         row = self.state["pending"].pop(key, None) or {}
@@ -147,4 +210,6 @@ class RetuneQueue:
             "corrupt_lines": self.state["corrupt_lines"],
             "re_drifts": sum(d.get("re_drifts", 0)
                              for d in self.state["done"].values()),
+            "requeued": self.state.get("requeued", 0),
+            "traffic_keys": len(self.state.get("traffic", {})),
         }

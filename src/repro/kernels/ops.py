@@ -27,6 +27,20 @@ ops read the frozen plan (explicit ``plan=`` argument, or the ambient
 generation-checked, so the moment a refit or a pinned override lands they
 go stale and dispatch falls back to ``choose_or_default``, where the new
 state wins.
+
+All of the above resolves at *trace* time -- one decision per distinct
+shape, but also one recompile per distinct shape.  The ``in_graph=``
+paths remove that last cost (ROADMAP item 2): pass a
+``core.device_plan.BucketedDispatch`` plus the raw dims as traced values,
+give the op envelope-padded operands (``core.buckets.pad_to`` to the
+lattice's ``envelope_shape``), and the bucket's config is fetched
+*inside* the compiled graph -- in-graph log2 rounding, a
+``DevicePlanTable`` gather, and a ``jax.lax.switch`` over the table's
+static config set (miss -> default-config branch).  One trace then
+serves every raw shape; outputs live in the leading corner of the
+envelope (zero padding is exact for matmul/colsum, causally masked for
+flash attention, and layernorm's padded rows are sliced away), and the
+caller slices ``[:m, :n]`` on the host where the raw dims are concrete.
 """
 
 from __future__ import annotations
@@ -55,6 +69,22 @@ MATMUL_DEFAULT = {"bm": 128, "bn": 512, "bk": 512}
 FLASH_DEFAULT = {"bq": 512, "bkv": 512}
 GMM_DEFAULT = {"bg": 128, "bn": 512, "bk": 512}
 SSD_DEFAULT = {"chunk": 256}
+
+
+def _switch_dispatch(disp, dims, branch_for_config, operands):
+    """Run one Pallas branch per distinct config via ``jax.lax.switch``.
+
+    ``disp.branch_index`` does the whole in-graph decision -- log2 bucket
+    rounding of the traced raw dims, the ``DevicePlanTable`` gather, and
+    the match against the table's static distinct-config set -- and the
+    switch picks the matching branch (the last branch holds the default
+    config for out-of-range / unplanned shapes).  Every branch sees the
+    same static envelope-padded operand shapes, so the op compiles once
+    no matter which raw shape arrives at run time.
+    """
+    idx, _ = disp.branch_index(dims)
+    branches = [branch_for_config(cfg) for cfg in disp.config_dicts()]
+    return jax.lax.switch(idx, branches, operands)
 
 
 def _resolve(kernel: str, D: dict, default: dict, plan) -> dict:
@@ -99,8 +129,39 @@ def _batched_matmul(bm: int, bn: int, bk: int, interpret: bool,
 
 
 def matmul(x: jax.Array, y: jax.Array, *, use_pallas: bool = False,
-           interpret: bool = True, out_dtype=None, plan=None) -> jax.Array:
-    """Tuned matmul over the last two dims; leading dims are batched."""
+           interpret: bool = True, out_dtype=None, plan=None,
+           in_graph=None, dims=None) -> jax.Array:
+    """Tuned matmul over the last two dims; leading dims are batched.
+
+    With ``in_graph=`` (a ``BucketedDispatch``) the operands must be 2-D
+    and padded to the lattice envelope; ``dims`` carries the traced raw
+    ``{m, n, k}`` and the config is resolved inside the graph.  The
+    result is envelope-shaped -- the caller slices ``[:m, :n]`` (exact:
+    padded k contributes zero partial products, padded rows/cols land in
+    the sliced-off tail).
+    """
+    if in_graph is not None:
+        if x.ndim != 2:
+            raise ValueError("in-graph matmul takes 2-D envelope-padded "
+                             f"operands, got x.ndim={x.ndim}")
+        M, K = x.shape
+        N = y.shape[-1]
+        if dims is None:
+            dims = {"m": M, "n": N, "k": K}
+
+        def branch(cfg):
+            bm = _fit_tile(M, cfg["bm"], 8)
+            bn = _fit_tile(N, cfg["bn"], 128)
+            bk = _fit_tile(K, cfg["bk"], 128)
+
+            def run(ops_):
+                a, b = ops_
+                return matmul_pallas(a, b, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret,
+                                     out_dtype=out_dtype)
+            return run
+
+        return _switch_dispatch(in_graph, dims, branch, (x, y))
     if not use_pallas:
         return ref.matmul_ref(x, y, out_dtype)
     m, k = x.shape[-2], x.shape[-1]
@@ -129,8 +190,41 @@ def flash_attention(
     softcap: float | None = None, scale: float | None = None,
     use_pallas: bool = False, interpret: bool = True,
     q_chunk: int | None = None, plan=None,
+    in_graph=None, dims=None,
 ) -> jax.Array:
-    """(b*hq, sq, d) x (b*hkv, skv, d)^2 -> (b*hq, sq, d), tuned tiles."""
+    """(b*hq, sq, d) x (b*hkv, skv, d)^2 -> (b*hq, sq, d), tuned tiles.
+
+    With ``in_graph=`` the operands are envelope-padded and ``dims``
+    carries the traced raw ``{bh, sq, skv}``.  Only causal self-attention
+    with aligned q/kv padding is safe here: a query row at position i
+    attends to kv positions <= i, so zero rows in the padded kv tail are
+    masked out for every *valid* query row, and padded query rows land in
+    the sliced-off tail.
+    """
+    if in_graph is not None:
+        if not causal:
+            raise ValueError(
+                "in-graph flash attention requires causal=True: non-causal "
+                "attention would read the zero-padded kv tail")
+        BH, SQ, d_env = q.shape
+        SKV = k.shape[1]
+        if dims is None:
+            dims = {"bh": BH, "sq": SQ, "skv": SKV}
+
+        def branch(cfg):
+            bq = _fit_tile(SQ, cfg["bq"], 8)
+            bkv = _fit_tile(SKV, cfg["bkv"], 128)
+
+            def run(ops_):
+                qq, kk, vv = ops_
+                return flash_attention_pallas(
+                    qq, kk, vv, num_q_heads=num_q_heads,
+                    num_kv_heads=num_kv_heads, bq=bq, bkv=bkv,
+                    causal=causal, window=window, softcap=softcap,
+                    scale=scale, interpret=interpret)
+            return run
+
+        return _switch_dispatch(in_graph, dims, branch, (q, k, v))
     if not use_pallas:
         return ref.flash_attention_ref(
             q, k, v, num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
@@ -207,8 +301,33 @@ def _colsum_auto(dtype_bytes: int):
 def layernorm(x: jax.Array, res: jax.Array, gamma: jax.Array,
               beta: jax.Array, *, eps: float = 1e-6,
               use_pallas: bool = False, interpret: bool = True,
-              plan=None) -> jax.Array:
-    """Fused layernorm + residual with an introspection-tuned row tile."""
+              plan=None, in_graph=None, dims=None) -> jax.Array:
+    """Fused layernorm + residual with an introspection-tuned row tile.
+
+    With ``in_graph=`` the inputs are row-padded to the envelope and
+    ``dims`` carries the traced raw ``{r}``.  Padded rows normalize a
+    zero row (finite: eps keeps the rsqrt bounded) and end up in the
+    sliced-off tail, so the valid rows are unaffected.
+    """
+    if in_graph is not None:
+        from .layernorm import layernorm_pallas
+
+        R, c = x.shape
+        ak = _layernorm_auto(c, 2 if x.dtype == jnp.bfloat16 else 4)
+        if dims is None:
+            dims = {"r": R}
+
+        def branch(cfg):
+            fitted = ak.fit_config(cfg, {"r": R})
+
+            def run(ops_):
+                xx, rr, gg, bb = ops_
+                return layernorm_pallas(xx, rr, gg, bb, br=fitted["br"],
+                                        eps=eps, interpret=interpret)
+            return run
+
+        return _switch_dispatch(in_graph, dims, branch,
+                                (x, res, gamma, beta))
     if not use_pallas:
         return ref.layernorm_ref(x, res, gamma, beta, eps=eps)
     from .layernorm import layernorm_pallas
@@ -222,8 +341,33 @@ def layernorm(x: jax.Array, res: jax.Array, gamma: jax.Array,
 
 
 def blocked_colsum(x: jax.Array, *, use_pallas: bool = False,
-                   interpret: bool = True, plan=None) -> jax.Array:
-    """Column sums of (r, c) with introspection-tuned (br, bc) tiles."""
+                   interpret: bool = True, plan=None,
+                   in_graph=None, dims=None) -> jax.Array:
+    """Column sums of (r, c) with introspection-tuned (br, bc) tiles.
+
+    With ``in_graph=`` the input is envelope-padded and ``dims`` carries
+    the traced raw ``{r, c}``; padded rows add zero to every column sum
+    and padded columns land in the sliced-off tail, so the result is
+    exact.
+    """
+    if in_graph is not None:
+        from .reduce import colsum_pallas
+
+        R, C = x.shape
+        ak = _colsum_auto(2 if x.dtype == jnp.bfloat16 else 4)
+        if dims is None:
+            dims = {"r": R, "c": C}
+
+        def branch(cfg):
+            fitted = ak.fit_config(cfg, {"r": R, "c": C})
+
+            def run(ops_):
+                (xx,) = ops_
+                return colsum_pallas(xx, br=fitted["br"], bc=fitted["bc"],
+                                     interpret=interpret)[0]
+            return run
+
+        return _switch_dispatch(in_graph, dims, branch, (x,))
     if not use_pallas:
         return ref.colsum_ref(x)
     from .reduce import colsum_pallas

@@ -20,6 +20,12 @@ writes a Chrome trace-event file at exit (open in ui.perfetto.dev);
 ``--ledger run.jsonl`` appends the flight ledger (choices, probes, drift,
 refits -- implies --telemetry) for later replay with
 ``python -m repro.launch.status --ledger run.jsonl``.
+
+``--async`` serves through the engine's async front-end (scheduler
+thread, thread-safe submit, chunked jitted prefill -- see
+serving/engine.py) and prints the compile counts afterwards; ``--buckets``
+adds per-step bucketed-dispatch accounting (hit/miss + padding waste) for
+the decode attention kernel.
 """
 
 from __future__ import annotations
@@ -34,7 +40,8 @@ from repro.models import Model, init_params
 from repro.serving import Request, ServingEngine
 
 __all__ = ["main", "build_engine", "build_telemetry",
-           "default_plan_envelope", "build_auto_kernels"]
+           "default_plan_envelope", "default_bucket_lattices",
+           "build_auto_kernels"]
 
 
 def default_plan_envelope(batch: int, max_seq: int) -> dict:
@@ -99,7 +106,9 @@ def build_telemetry(seed: int = 0, auto_kernels=(), ledger=None):
 def build_engine(cfg, batch: int, max_seq: int, mesh=None, params=None,
                  seed: int = 0, telemetry=None,
                  plan_envelope=None, auto_kernels=None,
-                 step_plans: bool = True, trace=None) -> ServingEngine:
+                 step_plans: bool = True, trace=None,
+                 prefill_chunk: int = 32,
+                 bucket_lattices=None) -> ServingEngine:
     model = Model(cfg)
     sharder = Sharder(mesh=mesh, rules=decode_rules())
     if params is None:
@@ -108,7 +117,29 @@ def build_engine(cfg, batch: int, max_seq: int, mesh=None, params=None,
                          max_seq=max_seq, telemetry=telemetry,
                          plan_envelope=plan_envelope,
                          auto_kernels=auto_kernels,
-                         step_plans=step_plans, trace=trace)
+                         step_plans=step_plans, trace=trace,
+                         prefill_chunk=prefill_chunk,
+                         bucket_lattices=bucket_lattices)
+
+
+def default_bucket_lattices(cfg, batch: int, max_seq: int) -> dict:
+    """Bucket lattices for the decode step's attention kernel: log2 seq
+    buckets up to ``max_seq``, fixed batch-heads axis.  The engine replays
+    these per step for hit/miss + padding-waste accounting (and they are
+    the lattices an in-graph bucketed step would pad to)."""
+    from repro.core import BucketLattice
+
+    key = f"flash_attn_d{cfg.head_dim}" + ("_causal" if cfg.causal else "")
+    return {key: BucketLattice.from_axes(key, {
+        "bh": [batch * cfg.n_heads],
+        "sq": pow2_seqs(max_seq),
+        "skv": pow2_seqs(max_seq),
+    })}
+
+
+def pow2_seqs(max_seq: int) -> list[int]:
+    from repro.core import pow2_span
+    return list(pow2_span(1, max_seq))
 
 
 def main() -> None:
@@ -137,6 +168,18 @@ def main() -> None:
                          "(layernorm fusion, blocked column reduction) and "
                          "serve them through the engine: zero hand-written "
                          "spec code")
+    ap.add_argument("--async", dest="run_async", action="store_true",
+                    help="serve through the async front-end (scheduler "
+                         "thread + chunked prefill) instead of the "
+                         "synchronous loop")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens advanced per jitted prefill scan "
+                         "on the async path (default 32)")
+    ap.add_argument("--buckets", action="store_true",
+                    help="enable per-step bucketed-dispatch accounting for "
+                         "the decode attention kernel (hit/miss + padding "
+                         "waste, printed after the run and exported by "
+                         "--telemetry)")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="record structured spans for the whole run and "
                          "write a Chrome trace-event JSON here (open in "
@@ -173,9 +216,13 @@ def main() -> None:
                  if args.telemetry or ledger is not None else None)
     envelope = (default_plan_envelope(args.batch, args.max_seq)
                 if args.plans else None)
+    buckets = (default_bucket_lattices(cfg, args.batch, args.max_seq)
+               if args.buckets else None)
     engine = build_engine(cfg, args.batch, args.max_seq, telemetry=telemetry,
                           plan_envelope=envelope, auto_kernels=auto,
-                          step_plans=not args.no_step_plans, trace=tracer)
+                          step_plans=not args.no_step_plans, trace=tracer,
+                          prefill_chunk=args.prefill_chunk,
+                          bucket_lattices=buckets)
     ws = engine.warm_started
     print(f"warm start: {len(ws)} driver(s) loaded {list(ws)}, "
           f"{len(ws.plans_loaded)} plan(s), "
@@ -196,9 +243,20 @@ def main() -> None:
                   for j in range(4 + i % 4)]
         engine.submit(Request(rid=i, prompt=prompt,
                               max_new_tokens=args.max_new))
-    finished = engine.run()
+    finished = engine.run_async() if args.run_async else engine.run()
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"req {r.rid}: prompt={r.prompt} -> output={r.output}")
+    if args.run_async:
+        cc = engine.compile_counts
+        print(f"async front-end: {cc['decode_step']} decode-step compile(s), "
+              f"{cc['prefill_chunk']} prefill-chunk compile(s), "
+              f"chunk={engine.prefill_chunk}")
+    if args.buckets:
+        bs = engine.bucket_stats
+        n = bs["hits"] + bs["misses"]
+        frac = bs["waste_sum"] / n if n else 0.0
+        print(f"bucket dispatch: {bs['hits']} hits, {bs['misses']} misses "
+              f"over {bs['steps']} steps, mean padding waste {frac:.3f}")
     if telemetry is not None:
         if args.telemetry_json:
             with open(args.telemetry_json, "w") as f:

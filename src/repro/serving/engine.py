@@ -2,11 +2,36 @@
 
 A fixed pool of ``batch`` decode slots shares one jit-compiled decode step
 (so shapes never change).  Requests queue up; free slots are filled by
-prefilling the prompt token-by-token through the same decode step (adequate
-at the engine-test scale; production prefill would use the full-sequence
-forward).  Finished sequences (EOS or max_new_tokens) free their slot
-immediately -- the decode batch never drains, which is the continuous-
-batching property.
+prefilling the prompt through the same decode step.  Finished sequences
+(EOS or max_new_tokens) free their slot immediately -- the decode batch
+never drains, which is the continuous-batching property.
+
+Two front-ends share those slots:
+
+* ``run()`` -- the synchronous baseline: the caller's thread alternates
+  fill/decode, and prefill feeds the prompt token-by-token (one Python
+  round-trip per prompt token).
+* ``start()`` / ``submit()`` / ``drain()`` (or the ``run_async()``
+  convenience) -- the async front-end: a scheduler thread owns the
+  device loop, ``submit`` is thread-safe and wakes it, and prefill runs
+  *chunked* -- jitted ``lax.scan``s advance the prompt in its descending
+  power-of-two chunk split (cap ``prefill_chunk``), so the trace cache
+  holds at most log2(prefill_chunk)+1 prefill shapes no matter how many
+  prompt lengths arrive (slot, start position, and valid count are
+  traced operands; tail lanes past the valid count idempotently rewrite
+  the chunk's first position).
+  The host only blocks on device results at sample boundaries
+  (``_decode_once`` reading logits), so slot bookkeeping overlaps device
+  execution.  ``compile_counts`` tracks traces of the decode and prefill
+  steps -- the "one compiled step serves every shape" invariant is
+  ``compile_counts["decode_step"] == 1`` across a whole traffic mix.
+
+Passing ``bucket_lattices=`` (kernel name -> ``core.buckets.BucketLattice``
+or a prebuilt ``core.device_plan.BucketedDispatch``) opts the engine into
+per-step bucket accounting: each decode step replays the in-graph bucket
+decision on the host (bit-identical rounding) and feeds hit/miss +
+padding-waste stats to telemetry (``bucket_stats``,
+``Telemetry.note_bucket_step``).
 
 Inside each decode step the KLARAPTOR drivers pick kernel launch parameters
 for the current shapes (once, then memoized) -- the serving-side face of the
@@ -45,6 +70,7 @@ envelope.
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import jax
@@ -73,7 +99,8 @@ class ServingEngine:
     def __init__(self, model, params, sharder, batch: int, max_seq: int,
                  eos_id: int = 1, seed: int = 0, warm_start: bool = True,
                  telemetry=None, plan_envelope=None, auto_kernels=None,
-                 step_plans: bool = True, trace=None):
+                 step_plans: bool = True, trace=None,
+                 prefill_chunk: int = 32, bucket_lattices=None):
         self.model = model
         self.params = params
         self.sharder = sharder
@@ -149,14 +176,101 @@ class ServingEngine:
         self.pending: list[Request] = []
         self.finished: list[Request] = []
 
+        # Async front-end state: one condition variable guards the pending
+        # and finished queues (submit from any thread wakes the scheduler;
+        # drain sleeps on it until the engine goes idle).
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        self._cv = threading.Condition()
+        self._thread: threading.Thread | None = None
+        self._running = False
+        self._max_steps = 10_000
+
+        # Trace counters: each key is bumped inside the corresponding jitted
+        # function *body*, which executes once per trace -- so the value is
+        # the compile count, the quantity the bucketed-dispatch path holds
+        # at 1 for the decode step (and at most log2(prefill_chunk)+1 for
+        # the pow2-split prefill scans) across arbitrary traffic mixes.
+        self.compile_counts = {"decode_step": 0, "prefill_chunk": 0}
+
+        # Per-step bucket accounting (tentpole observability): kernel name
+        # -> BucketedDispatch, replayed host-side after each decode step.
+        self.bucket_stats = {"hits": 0, "misses": 0, "waste_sum": 0.0,
+                             "steps": 0}
+        self._bucket_dispatch = self._build_bucket_dispatch(bucket_lattices)
+
         def step(params, token, pos, cache):
+            self.compile_counts["decode_step"] += 1
             return model.decode_step(params, token, pos, cache, sharder)
 
         self._step = jax.jit(step)
 
+        def prefill_chunk_step(params, cache, tokens, slot, pos0, n_valid,
+                               base_tok, base_pos):
+            # One scan lane per chunk position.  slot/pos0/n_valid are
+            # TRACED operands, so every (prompt length, slot, offset)
+            # combination shares this single trace; lanes past n_valid
+            # rewrite position pos0 with tokens[0] -- an idempotent
+            # re-write of work lane 0 already did, chosen over masking the
+            # step out so the scan body stays branch-free.
+            self.compile_counts["prefill_chunk"] += 1
+
+            def body(carry, xs):
+                i, tok_i = xs
+                valid = i < n_valid
+                tok = base_tok.at[slot].set(
+                    jnp.where(valid, tok_i, tokens[0]))
+                ps = base_pos.at[slot].set(
+                    jnp.where(valid, pos0 + i, pos0))
+                _, carry = model.decode_step(params, tok, ps, carry, sharder)
+                return carry, None
+
+            idx = jnp.arange(tokens.shape[0], dtype=jnp.int32)
+            cache, _ = jax.lax.scan(body, cache, (idx, tokens))
+            return cache
+
+        self._prefill_step = jax.jit(prefill_chunk_step)
+
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.pending.append(req)
+        """Queue a request; thread-safe, wakes the scheduler if running."""
+        with self._cv:
+            self.pending.append(req)
+            self._cv.notify_all()
+
+    def start(self) -> None:
+        """Start the async scheduler thread (idempotent)."""
+        if self._thread is not None:
+            return
+        self._running = True
+        self._thread = threading.Thread(
+            target=self._scheduler_loop, daemon=True, name="engine-scheduler")
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop the scheduler thread and join it."""
+        with self._cv:
+            self._running = False
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def drain(self, timeout: float | None = None) -> list[Request]:
+        """Block until every submitted request has finished (or timeout)."""
+        with self._cv:
+            self._cv.wait_for(
+                lambda: not self._running or not self._has_work(), timeout)
+            return list(self.finished)
+
+    def run_async(self, max_steps: int = 10_000) -> list[Request]:
+        """Async-front-end analogue of ``run``: start, drain, stop."""
+        self._max_steps = max_steps
+        self.start()
+        try:
+            self.drain()
+        finally:
+            self.stop()
+        return self.finished
 
     def tune_for_shape(self, spec, D, device, strategy="surrogate",
                        budget=None, hw=None) -> dict[str, int]:
@@ -195,6 +309,104 @@ class ServingEngine:
         return self.finished
 
     # -- internals ---------------------------------------------------------------
+    def _has_work(self) -> bool:
+        return bool(self.pending) or any(r is not None for r in self.slot_req)
+
+    def _scheduler_loop(self) -> None:
+        """Async device loop: fill free slots (chunked prefill), decode,
+        notify waiters; sleep on the condition variable when idle so a
+        ``submit`` wakes it immediately."""
+        steps = 0
+        while True:
+            with self._cv:
+                if not self._running:
+                    return
+                if steps >= self._max_steps:
+                    self._running = False
+                    self._cv.notify_all()
+                    return
+                if not self._has_work():
+                    self._cv.notify_all()
+                    self._cv.wait(0.05)
+                    continue
+            self._fill_slots(chunked=True)
+            self._decode_once()
+            steps += 1
+            with self._cv:
+                self._cv.notify_all()
+
+    def _build_bucket_dispatch(self, bucket_lattices) -> dict:
+        """kernel -> BucketedDispatch from the ``bucket_lattices=`` arg.
+
+        Prebuilt ``BucketedDispatch`` values pass through; bare
+        ``BucketLattice`` values get a dispatch built over whatever plan
+        the registry holds (empty table -> every step is a default-branch
+        miss, which the stats then show).  Default configs come from the
+        model's own kernel requests when available, else the ops-module
+        heuristics.
+        """
+        if not bucket_lattices:
+            return {}
+        from repro.core.device_plan import (
+            BucketedDispatch, build_bucketed_dispatch)
+
+        defaults: dict[str, dict] = {}
+        cfg = getattr(self.model, "cfg", None)
+        if cfg is not None:
+            from repro.models.transformer import decode_kernel_requests
+            for kr in decode_kernel_requests(cfg, self.batch, self.max_seq):
+                defaults.setdefault(kr.kernel, dict(kr.default))
+        out: dict = {}
+        for kernel, lat in bucket_lattices.items():
+            if isinstance(lat, BucketedDispatch):
+                out[kernel] = lat
+                continue
+            default = defaults.get(kernel) or self._heuristic_default(kernel)
+            if default is None:
+                continue
+            out[kernel] = build_bucketed_dispatch(kernel, lat, default)
+        return out
+
+    @staticmethod
+    def _heuristic_default(kernel: str) -> dict | None:
+        from repro.kernels import ops as _ops
+        for prefix, default in (("matmul", _ops.MATMUL_DEFAULT),
+                                ("flash", _ops.FLASH_DEFAULT),
+                                ("moe", _ops.GMM_DEFAULT),
+                                ("ssd", _ops.SSD_DEFAULT)):
+            if kernel.startswith(prefix):
+                return dict(default)
+        return None
+
+    def _note_bucket_stats(self, active: list[int]) -> None:
+        """Host replay of the in-graph bucket decision for this step's
+        effective sequence length; feeds engine stats and telemetry.
+        Bit-identical to the graph by construction (BucketLattice shares
+        the rounding arithmetic), so no device round-trip is needed."""
+        if not self._bucket_dispatch:
+            return
+        cfg = getattr(self.model, "cfg", None)
+        if cfg is None:
+            return
+        from repro.models.transformer import decode_kernel_requests
+
+        eff = int(max(self.slot_pos[s] for s in active)) + 1
+        Ds: dict[str, dict] = {}
+        for kr in decode_kernel_requests(cfg, self.batch, self.max_seq,
+                                         seqs=(eff,)):
+            Ds.setdefault(kr.kernel, dict(kr.D))
+        for kernel, disp in self._bucket_dispatch.items():
+            D = Ds.get(kernel)
+            if D is None:
+                continue
+            hit, waste = disp.observe(D)
+            self.bucket_stats["hits" if hit else "misses"] += 1
+            self.bucket_stats["waste_sum"] += waste
+            if self.telemetry is not None and \
+                    hasattr(self.telemetry, "note_bucket_step"):
+                self.telemetry.note_bucket_step(hit, waste)
+        self.bucket_stats["steps"] += 1
+
     def _refresh_step_plan(self) -> None:
         cfg = getattr(self.model, "cfg", None)
         if cfg is None or not getattr(cfg, "use_pallas", False):
@@ -233,20 +445,90 @@ class ServingEngine:
                 out = jax.block_until_ready(out)
         return out
 
-    def _fill_slots(self) -> None:
+    def _fill_slots(self, chunked: bool = False) -> None:
         for s in range(self.batch):
-            if self.slot_req[s] is not None or not self.pending:
+            if self.slot_req[s] is not None:
                 continue
-            req = self.pending.pop(0)
+            with self._cv:
+                if not self.pending:
+                    break
+                req = self.pending.pop(0)
             # prefill the prompt through the shared decode step
             with trace_span("engine.prefill", rid=req.rid,
-                            tokens=len(req.prompt) - 1):
-                for t_idx, tok in enumerate(req.prompt[:-1]):
-                    self._single(s, tok, t_idx)
+                            tokens=len(req.prompt) - 1, chunked=chunked):
+                if chunked:
+                    self._prefill_chunked(s, req.prompt)
+                else:
+                    for t_idx, tok in enumerate(req.prompt[:-1]):
+                        self._single(s, tok, t_idx)
             self.slot_req[s] = req
             self.slot_pos[s] = len(req.prompt) - 1
             self.slot_last[s] = req.prompt[-1]
             self.slot_budget[s] = req.max_new_tokens
+
+    @staticmethod
+    def _pow2_chunks(n: int, cmax: int) -> list[int]:
+        """Descending powers of two summing to ``n``, each <= ``cmax``.
+
+        Log2-bucketed chunk lengths (the same rounding the bucket lattice
+        uses for data params): the scan compute is exactly ``n`` lanes --
+        no masked tail lanes re-running decode steps -- at the cost of at
+        most ``log2(cmax) + 1`` distinct chunk shapes, each traced once
+        for the life of the engine.
+        """
+        out = []
+        c = 1
+        while c * 2 <= max(1, cmax):
+            c *= 2
+        while n > 0:
+            while c > n:
+                c //= 2
+            out.append(c)
+            n -= c
+        return out
+
+    def _prefill_chunked(self, slot: int, prompt: list[int]) -> None:
+        """Prefill ``prompt[:-1]`` in jitted ``lax.scan`` chunks.
+
+        One device dispatch per chunk instead of one per token.  Chunk
+        lengths are the descending power-of-two split of the prompt (cap
+        ``prefill_chunk``), so any prompt length costs exactly its own
+        lane count and the trace-cache holds at most log2(prefill_chunk)+1
+        prefill shapes; slot/offset/valid-count are traced operands, so
+        prompts never add traces beyond those sizes.  No host block here
+        -- the cache stays on device and the next step's dispatch queues
+        behind it.
+        """
+        toks = prompt[:-1]
+        base_tok = np.array(self.slot_last, np.int32)
+        base_pos = np.array(self.slot_pos, np.int32)
+        t0 = 0
+        for c in self._pow2_chunks(len(toks), self.prefill_chunk):
+            buf = np.asarray(toks[t0:t0 + c], np.int32)
+            self._run_prefill(buf, slot, t0, c, base_tok, base_pos)
+            t0 += c
+
+    def _run_prefill(self, tokens, slot, pos0, n_valid,
+                     base_tok, base_pos) -> None:
+        """One chunked-prefill dispatch under the active step plan (same
+        staleness contract as ``_run_step``)."""
+        if self._step_plan is not None and self._step_plan.stale():
+            self._refresh_step_plan()
+        args = (self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(pos0, jnp.int32),
+                jnp.asarray(n_valid, jnp.int32),
+                jnp.asarray(base_tok), jnp.asarray(base_pos))
+        with trace_span("engine.prefill_chunk", slot=int(slot),
+                        n_valid=int(n_valid)):
+            if self._step_plan is None:
+                self.cache = self._prefill_step(*args)
+            else:
+                from repro.core.step_plan import use_step_plan
+
+                with use_step_plan(self._step_plan):
+                    self.cache = self._prefill_step(*args)
+            if tracing():
+                self.cache = jax.block_until_ready(self.cache)
 
     def _single(self, slot: int, token: int, pos: int) -> None:
         tok = np.array(self.slot_last, np.int32)
@@ -268,6 +550,7 @@ class ServingEngine:
             greedy_tok = np.asarray(greedy(logits))
             sampled_tok = np.asarray(sample(logits, sub, temperature=max(
                 temps | {1.0})))
+            self._note_bucket_stats(active)
             for s in active:
                 req = self.slot_req[s]
                 nxt = int(greedy_tok[s] if req.temperature <= 0.0
@@ -279,5 +562,7 @@ class ServingEngine:
                 if (nxt == self.eos_id or self.slot_budget[s] <= 0
                         or self.slot_pos[s] >= self.max_seq - 1):
                     req.done = True
-                    self.finished.append(req)
-                    self.slot_req[s] = None  # slot freed: continuous batching
+                    with self._cv:
+                        self.finished.append(req)
+                        self.slot_req[s] = None  # freed: continuous batching
+                        self._cv.notify_all()

@@ -115,6 +115,18 @@ class Telemetry:
         with self._lock:
             self.counters.warm_started_kernels += len(kernels)
 
+    def note_bucket_step(self, hit: bool, waste: float) -> None:
+        """One bucketed-dispatch outcome from a serving decode step: the
+        engine's host replay of the in-graph bucket decision (bit-identical
+        rounding, see core/buckets.py).  ``waste`` is the padding-waste
+        fraction of the hit bucket (0.0 on a miss)."""
+        with self._lock:
+            if hit:
+                self.counters.bucket_hits += 1
+            else:
+                self.counters.bucket_misses += 1
+            self.counters.bucket_padding_waste_sum += float(waste)
+
     # -- export --------------------------------------------------------------
     def snapshot(self) -> dict:
         return self.exporter.snapshot()

@@ -393,6 +393,80 @@ class TestRetuneQueue:
         q = RetuneQueue(state)
         assert q.summary()["pending"] == 0
 
+    def test_priority_drain_is_traffic_weighted(self, tmp_path):
+        """Drain order is drift magnitude x (1 + ledger traffic): a hot
+        mildly-drifted key outranks a cold badly-drifted one."""
+        ledger = tmp_path / "flight.jsonl"
+        # real ledger drift lines carry bucket_label(shape_bucket(D))
+        mild = _drift_line(rel_error_ewma=0.2, bucket="k9,m10,n9")
+        bad = _drift_line(kernel="moe_gmm_b16", rel_error_ewma=0.5,
+                          bucket="k9,m10,n9")
+        ledger.write_text(json.dumps(mild) + "\n" + json.dumps(bad) + "\n")
+        q = RetuneQueue(tmp_path / "state.json")
+        q.ingest(ledger)
+        # no traffic yet: pure magnitude, the worse fit first
+        assert q.pending()[0][0] == drift_key(bad)
+        # choice lines carry raw D; the tally must bucket it to the same
+        # key the drift events use (bucket_label(shape_bucket(D)))
+        with open(ledger, "a") as f:
+            f.write(json.dumps({"type": "choice", "kernel": "matmul_b16",
+                                "hw": "tpu_v5e", "D": mild["D"],
+                                "n_coalesced": 10}) + "\n")
+        assert q.ingest(ledger) == 0        # traffic enqueues nothing
+        assert q.state["traffic"][drift_key(mild)] == 10
+        assert q.priority(drift_key(mild)) == pytest.approx(0.2 * 11)
+        assert q.priority(drift_key(bad)) == pytest.approx(0.5)
+        assert q.pending()[0][0] == drift_key(mild)     # hot path first
+
+    def test_choice_with_explicit_bucket_and_bare_lines(self, tmp_path):
+        ledger = tmp_path / "flight.jsonl"
+        lines = [{"type": "choice", "kernel": "k", "hw": "h",
+                  "bucket": "m=64"},
+                 {"type": "choice", "kernel": "k", "hw": "h",
+                  "bucket": "m=64", "n_coalesced": 4},
+                 {"type": "choice"}]        # bare line must not crash
+        ledger.write_text("".join(json.dumps(e) + "\n" for e in lines))
+        q = RetuneQueue(tmp_path / "state.json")
+        assert q.ingest(ledger) == 0
+        assert q.state["traffic"]["k|h|m=64"] == 5
+        assert q.state["traffic"]["?|?|?"] == 1
+        assert q.summary()["traffic_keys"] == 2
+
+    def test_done_key_requeues_after_repeated_re_drifts(self, tmp_path):
+        """One stray re-drift stays an operator decision; hitting
+        ``requeue_after`` (default 2) re-enqueues the key automatically."""
+        ledger = tmp_path / "flight.jsonl"
+        ledger.write_text(json.dumps(_drift_line()) + "\n")
+        q = RetuneQueue(tmp_path / "state.json")
+        q.ingest(ledger)
+        key = q.pending()[0][0]
+        q.mark_done(key, {"succeeded": True})
+        with open(ledger, "a") as f:        # first re-drift: counted only
+            f.write(json.dumps(_drift_line()) + "\n")
+        assert q.ingest(ledger) == 0
+        assert q.summary()["pending"] == 0 and q.summary()["requeued"] == 0
+        with open(ledger, "a") as f:        # second: the refit did not take
+            f.write(json.dumps(_drift_line(rel_error_ewma=0.7)) + "\n")
+        assert q.ingest(ledger) == 1
+        s = q.summary()
+        assert s["pending"] == 1 and s["requeued"] == 1
+        assert key not in q.state["done"]
+        assert dict(q.pending())[key]["rel_error_ewma"] == 0.7
+        # the requeue survives a restart
+        assert RetuneQueue(tmp_path / "state.json").summary()["pending"] == 1
+
+    def test_requeue_after_one_requeues_immediately(self, tmp_path):
+        ledger = tmp_path / "flight.jsonl"
+        ledger.write_text(json.dumps(_drift_line()) + "\n")
+        q = RetuneQueue(tmp_path / "state.json", requeue_after=1)
+        q.ingest(ledger)
+        key = q.pending()[0][0]
+        q.mark_done(key, {"succeeded": True})
+        with open(ledger, "a") as f:
+            f.write(json.dumps(_drift_line()) + "\n")
+        assert q.ingest(ledger) == 1
+        assert q.summary()["pending"] == 1 and q.summary()["requeued"] == 1
+
 
 class TestRetuneEndToEnd:
     @pytest.mark.slow

@@ -121,6 +121,67 @@ class TestDevicePlanTable:
         _, found = step(jnp.array([999, 2048, 512], dtype=jnp.int32))
         assert not bool(found)
 
+    def test_vmapped_batched_lookup(self, builds):
+        """``lookup`` composes with ``jax.vmap``: one batched probe over a
+        mixed batch of hits and misses resolves row-per-key, bit-identical
+        to the host table -- the shape a batched serving step would use."""
+        import jax
+        import jax.numpy as jnp
+
+        driver = builds["matmul"].driver
+        cols = lattice(ENVELOPES["matmul"])
+        table = compile_plan(driver, cols)
+        dev = table.to_device()
+
+        batch_D = _rows(driver, cols)[:6] + [
+            {"m": 999, "n": 2048, "k": 512},      # miss: unplanned shape
+            {"m": 0, "n": 0, "k": 0},             # miss: degenerate key
+        ]
+        keys = jnp.asarray([[D[d] for d in driver.data_params]
+                            for D in batch_D], dtype=jnp.int32)
+        batched = jax.jit(jax.vmap(dev.lookup))
+        rows, found = batched(keys)
+        assert rows.shape == (len(batch_D), len(dev.program_params))
+        assert found.shape == (len(batch_D),)
+        for i, D in enumerate(batch_D):
+            want = table.lookup(D)
+            if want is None:
+                assert not bool(found[i]), D
+            else:
+                assert bool(found[i]), D
+                assert {p: int(np.asarray(rows)[i][j])
+                        for j, p in enumerate(dev.program_params)} == want
+
+    def test_in_jit_miss_takes_default_branch(self, builds):
+        """A lookup miss inside a compiled step selects the fallback
+        branch (no retrace, no host round-trip): the step stays at one
+        trace across hits and misses."""
+        import jax
+        import jax.numpy as jnp
+
+        driver = builds["matmul"].driver
+        table = compile_plan(driver, lattice(ENVELOPES["matmul"]))
+        dev = table.to_device()
+        traces = {"n": 0}
+        sentinel = jnp.full((len(dev.program_params),), -7, jnp.int32)
+
+        @jax.jit
+        def step(keys):
+            traces["n"] += 1
+            row, found = dev.lookup(keys)
+            return jnp.where(found, row, sentinel), found
+
+        hit_D = {"m": 1024, "n": 2048, "k": 512}
+        row, found = step(jnp.asarray([1024, 2048, 512], jnp.int32))
+        assert bool(found)
+        assert {p: int(np.asarray(row)[i])
+                for i, p in enumerate(dev.program_params)} == \
+            table.lookup(hit_D)
+        row, found = step(jnp.asarray([1024, 2048, 513], jnp.int32))
+        assert not bool(found)
+        assert np.asarray(row).tolist() == [-7] * len(dev.program_params)
+        assert traces["n"] == 1
+
     def test_slot_collisions_resolved(self):
         """Keys whose home slots collide (forced linear-probe chain) all
         resolve to their own configs, on host and device."""

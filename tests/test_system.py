@@ -105,6 +105,44 @@ class TestServing:
             outs.append(engine.run()[0].output)
         assert outs[0] == outs[1]
 
+    def test_async_front_end_matches_sync(self):
+        """The async scheduler (chunked pow2 prefill) must produce greedy
+        outputs identical to the token-by-token sync loop, from one
+        decode-step trace across mixed prompt lengths."""
+        cfg = get_config("llama3.2-1b", smoke=True)
+        outs = {}
+        for mode in ("sync", "async"):
+            engine = build_engine(cfg, batch=2, max_seq=48, seed=0,
+                                  prefill_chunk=8)
+            for i in range(6):
+                prompt = [2 + (5 * i + j) % 20 for j in range(3 + 4 * i)]
+                engine.submit(Request(rid=i, prompt=prompt,
+                                      max_new_tokens=3))
+            finished = (engine.run() if mode == "sync"
+                        else engine.run_async())
+            outs[mode] = {r.rid: list(r.output) for r in finished}
+            if mode == "async":
+                assert engine.compile_counts["decode_step"] == 1
+                # pow2 chunking: at most log2(prefill_chunk)+1 traces
+                assert 1 <= engine.compile_counts["prefill_chunk"] <= 4
+        assert outs["sync"] == outs["async"]
+
+    def test_async_submit_while_running(self):
+        """Requests submitted after start() are picked up by the scheduler
+        thread; drain() returns them all."""
+        cfg = get_config("llama3.2-1b", smoke=True)
+        engine = build_engine(cfg, batch=2, max_seq=32)
+        engine.start()
+        try:
+            for i in range(4):
+                engine.submit(Request(rid=i, prompt=[3 + i, 7, 11],
+                                      max_new_tokens=2))
+            finished = engine.drain(timeout=120)
+        finally:
+            engine.stop()
+        assert sorted(r.rid for r in finished) == [0, 1, 2, 3]
+        assert all(1 <= len(r.output) <= 2 for r in finished)
+
     def test_mamba_engine(self):
         cfg = get_config("mamba2-130m", smoke=True)
         engine = build_engine(cfg, batch=2, max_seq=16)

@@ -104,6 +104,15 @@ def main() -> None:
             print(line, flush=True)
     except Exception as e:
         print(f"serving/skipped,0,{e!r}", flush=True)
+    # Trailing: the observatory gates (SLO closed loop, replay fidelity,
+    # bus-off dispatch overhead) must not mask the benches above (and
+    # vice versa).
+    try:
+        from benchmarks import bench_obs
+        for line in bench_obs.main([]):
+            print(line, flush=True)
+    except Exception as e:
+        print(f"obs/skipped,0,{e!r}", flush=True)
 
 
 if __name__ == "__main__":

@@ -34,6 +34,8 @@ import logging
 import os
 import tempfile
 
+from repro.trace import LedgerTail
+
 __all__ = ["RetuneQueue", "drift_key", "traffic_key"]
 
 logger = logging.getLogger(__name__)
@@ -110,27 +112,15 @@ class RetuneQueue:
         """
         path = os.path.abspath(str(ledger_path))
         offset = int(self.state["offsets"].get(path, 0))
-        try:
-            with open(path, "rb") as f:
-                f.seek(offset)
-                chunk = f.read()
-        except OSError:
-            return 0
-        cut = chunk.rfind(b"\n")
-        if cut < 0:
+        tail = LedgerTail(path, offset=offset)
+        events = tail.poll()
+        if tail.offset == offset:
             return 0            # no complete new line yet
-        complete, self.state["offsets"][path] = \
-            chunk[:cut + 1], offset + cut + 1
+        self.state["offsets"][path] = tail.offset
+        self.state["corrupt_lines"] += tail.corrupt_lines
 
         new_keys = 0
-        for line in complete.decode("utf-8", errors="replace").splitlines():
-            if not line.strip():
-                continue
-            try:
-                event = json.loads(line)
-            except json.JSONDecodeError:
-                self.state["corrupt_lines"] += 1
-                continue
+        for event in events:
             etype = event.get("type")
             if etype == "choice":
                 # Traffic tally: how many launches each key actually
@@ -168,12 +158,38 @@ class RetuneQueue:
         return new_keys
 
     # -- queue ---------------------------------------------------------------
+    def enqueue(self, event: dict, boost: float = 1.0) -> bool:
+        """Directly enqueue one drift-shaped event (SLO breach path).
+
+        The observatory's SLO engine calls this when a burn-rate rule
+        breaches: unlike ``ingest`` it bypasses the ledger tail (the alert
+        is already in hand) and can carry a priority ``boost`` multiplier
+        so acting SLO breaches outrank organically-tailed drift of the
+        same magnitude.  A key already done re-enters pending -- a breach
+        is stronger evidence than a single re-drift.  Returns True if the
+        key is newly pending.
+        """
+        key = drift_key(event)
+        self.state["done"].pop(key, None)
+        row = self.state["pending"].get(key)
+        if row is None:
+            self.state["pending"][key] = {"event": event, "n_seen": 1,
+                                          "boost": float(boost)}
+            self.save()
+            return True
+        row["event"] = event
+        row["n_seen"] += 1
+        row["boost"] = max(float(row.get("boost", 1.0)), float(boost))
+        self.save()
+        return False
+
     def priority(self, key: str) -> float:
         """Drain priority: drift magnitude x (1 + ledger traffic weight).
 
         The EWMA says how wrong the fit is, the traffic tally says how
         often that wrongness is paid; a key with no recorded traffic
-        still drains on magnitude alone (the +1).
+        still drains on magnitude alone (the +1).  SLO-breach enqueues
+        multiply in their ``boost`` so acted-on alerts drain first.
         """
         row = self.state["pending"].get(key)
         if row is None:
@@ -181,7 +197,7 @@ class RetuneQueue:
         ewma = row["event"].get("rel_error_ewma")
         mag = abs(float(ewma)) if ewma is not None else 0.0
         weight = float(self.state.get("traffic", {}).get(key, 0))
-        return mag * (1.0 + weight)
+        return mag * (1.0 + weight) * float(row.get("boost", 1.0))
 
     def pending(self) -> list[tuple[str, dict]]:
         """Deduped pending drift keys, highest priority first (key-sorted

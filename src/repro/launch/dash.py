@@ -1,0 +1,514 @@
+"""Zero-dependency live observability dashboard (stdlib http.server).
+
+    python -m repro.launch.dash --ledger run.jsonl            # follow a ledger
+    python -m repro.launch.dash --ledger run.jsonl --once     # terminal snapshot
+    python -m repro.launch.serve ... --dash 8777              # live, in-process
+
+One pane for the whole fleet story: launch-rate / fallback / padding-waste
+sparklines, SLO burn-rate state, the drift-retune queue, and the live
+predicted-vs-observed scorecard.  Endpoints:
+
+  ``/``                the auto-refreshing HTML page (no JS deps, no CDN)
+  ``/metrics``         Prometheus exposition (bus series; plus the
+                       telemetry exporter's families when attached live)
+  ``/api/summary``     headline stats + SLO + queue state (JSON)
+  ``/api/series``      per-window arrays for the sparklines (JSON)
+  ``/api/scorecard``   the accuracy table rows (JSON)
+
+Two feeding modes share everything above: **live** (an ``Observatory``
+already installed in this process -- ``serve --dash``) and **file** (tail
+one or many JSONL ledgers with ``LedgerTail``, replaying history first, so
+the dashboard works against any serving node that only shares a
+filesystem).  ``--once`` renders the same data as a terminal snapshot and
+exits -- the no-HTTP path for a quick look.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.obs import Observatory
+from repro.trace import LedgerTail
+
+__all__ = ["DashServer", "DashState", "main", "render_once"]
+
+
+class DashState:
+    """What the dashboard reads: an Observatory plus optional ledger tails.
+
+    Live mode passes tails=(); file mode registers one ``LedgerTail`` per
+    ledger and ``refresh()`` drains them into the bus before every render,
+    so the page is as fresh as the last complete line on disk.
+    """
+
+    def __init__(self, obs: Observatory, tails=(), evaluate: bool = False):
+        self.obs = obs
+        self.tails = list(tails)
+        self.evaluate = evaluate
+        self._lock = threading.Lock()
+
+    def refresh(self) -> None:
+        if not self.tails and not self.evaluate:
+            return
+        with self._lock:
+            for tail in self.tails:
+                for ev in tail.poll():
+                    self.obs.bus.ingest(ev)
+            if self.evaluate:
+                self.obs.evaluate()
+
+    # -- payloads ------------------------------------------------------------
+    def _window_sums(self, name: str, n: int, **match) -> list[float]:
+        """Per-window totals of one counter family over the last n windows,
+        summed across matching label sets (newest last)."""
+        bus = self.obs.bus
+        fam = bus.counters.get(name, {})
+        hi = bus.last_wall_ns // bus.window_ns
+        lo = hi - n + 1
+        vals = [0.0] * n
+        need = [f"{k}={v}" for k, v in match.items()]
+        for key, c in fam.items():
+            parts = key.split(",") if key else []
+            if not all(x in parts for x in need):
+                continue
+            for idx, v in c.windows.items():
+                if lo <= idx <= hi:
+                    vals[idx - lo] += v
+        return vals
+
+    def series(self, n: int = 120) -> dict:
+        """Sparkline arrays: one window per slot, newest last."""
+        choices = self._window_sums("choices", n)
+        fallback = self._window_sums("fallback", n)
+        steps = self._window_sums("bucket_steps", n)
+        waste = self._window_sums("padding_waste_sum", n)
+        drift = self._window_sums("drift_events", n)
+        window_s = self.obs.bus.window_ns / 1e9
+        return {
+            "window_s": window_s,
+            "launch_rate": [c / window_s for c in choices],
+            "fallback_frac": [f / c if c else 0.0
+                              for f, c in zip(fallback, choices)],
+            "padding_waste": [w / s if s else 0.0
+                              for w, s in zip(waste, steps)],
+            "drift_events": drift,
+        }
+
+    def summary(self) -> dict:
+        bus = self.obs.bus
+        now = bus.last_wall_ns
+        minute = int(60e9)
+        choices = bus.sum_counters("choices", now, minute)
+        fallback = bus.sum_counters("fallback", now, minute)
+        steps = bus.sum_counters("bucket_steps", now, minute)
+        waste = bus.sum_counters("padding_waste_sum", now, minute)
+        slo_rows = []
+        firing = {k for k in self.obs.slo.firing}
+        for rule in self.obs.slo.rules:
+            keys_firing = sorted(k for r, k in firing if r == rule.name)
+            slo_rows.append({
+                "slo": rule.name, "objective": rule.objective,
+                "fast_window_s": rule.fast_window_s,
+                "slow_window_s": rule.slow_window_s,
+                "severity": rule.severity, "retune": rule.retune,
+                "state": "breach" if keys_firing else "ok",
+                "keys": keys_firing,
+            })
+        return {
+            "n_events": bus.n_events,
+            "launch_rate_1m": choices / 60.0,
+            "fallback_frac_1m": fallback / choices if choices else 0.0,
+            "padding_waste_1m": waste / steps if steps else 0.0,
+            "alerts_firing": len(firing),
+            "alerts_total": len(self.obs.slo.alerts),
+            "slo": slo_rows,
+            "queue": (self.obs.queue.summary()
+                      if self.obs.queue is not None else None),
+            "queue_pending": ([{"key": k,
+                                "priority": self.obs.queue.priority(k)}
+                               for k, _ in self.obs.queue.pending()[:8]]
+                              if self.obs.queue is not None else []),
+        }
+
+    def scorecard(self) -> dict:
+        return {"band": list(self.obs.scorecard.band),
+                "rows": self.obs.scorecard.as_rows()}
+
+    def prometheus(self) -> str:
+        text = self.obs.prometheus()
+        tel = self.obs.telemetry
+        if tel is not None:
+            text += tel.prometheus()
+        return text
+
+
+class DashServer:
+    """Threaded stdlib HTTP server over one ``DashState``."""
+
+    def __init__(self, state: DashState, host: str = "127.0.0.1",
+                 port: int = 8777, interval_s: float = 2.0):
+        self.state = state
+        self.interval_s = float(interval_s)
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, *a):       # quiet: this is a dashboard
+                pass
+
+            def _send(self, body: bytes, ctype: str, code: int = 200):
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.send_header("Cache-Control", "no-store")
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self):
+                try:
+                    outer.state.refresh()
+                    if self.path in ("/", "/index.html"):
+                        self._send(outer.page().encode(),
+                                   "text/html; charset=utf-8")
+                    elif self.path == "/metrics":
+                        self._send(outer.state.prometheus().encode(),
+                                   "text/plain; version=0.0.4")
+                    elif self.path.startswith("/api/summary"):
+                        self._send(json.dumps(
+                            outer.state.summary()).encode(),
+                            "application/json")
+                    elif self.path.startswith("/api/series"):
+                        self._send(json.dumps(
+                            outer.state.series()).encode(),
+                            "application/json")
+                    elif self.path.startswith("/api/scorecard"):
+                        self._send(json.dumps(
+                            outer.state.scorecard()).encode(),
+                            "application/json")
+                    else:
+                        self._send(b"not found", "text/plain", 404)
+                except BrokenPipeError:
+                    pass
+
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._httpd.daemon_threads = True
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread: threading.Thread | None = None
+
+    def page(self) -> str:
+        return _PAGE.replace("__INTERVAL_MS__",
+                             str(int(self.interval_s * 1000)))
+
+    def serve_background(self) -> "DashServer":
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="obs-dash", daemon=True)
+        self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self._httpd.serve_forever()
+
+    def shutdown(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+
+
+def render_once(state: DashState) -> str:
+    """The ``--once`` terminal snapshot: same data, no HTTP."""
+    from .status import section, table
+    state.refresh()
+    s = state.summary()
+    lines = [f"fleet observatory: {s['n_events']} events, "
+             f"{s['alerts_firing']} SLO rule(s) firing, "
+             f"{s['alerts_total']} alert transition(s)"]
+    lines += section("headline (trailing 60s)")
+    lines += table(
+        ["metric", "value"],
+        [["launch rate", f"{s['launch_rate_1m']:.2f}/s"],
+         ["fallback fraction", f"{s['fallback_frac_1m']:.4f}"],
+         ["padding waste", f"{s['padding_waste_1m']:.4f}"]])
+    lines += section("SLO burn-rate rules")
+    lines += table(
+        ["slo", "objective", "state", "breached keys"],
+        [[r["slo"], f"{r['objective']:g}",
+          "BREACH" if r["state"] == "breach" else "ok",
+          ", ".join(r["keys"]) or "-"] for r in s["slo"]])
+    if s["queue"] is not None:
+        lines += section("retune queue")
+        lines.append("  " + json.dumps(s["queue"], sort_keys=True))
+        for row in s["queue_pending"]:
+            lines.append(f"  pending  {row['key']}  "
+                         f"priority={row['priority']:.3g}")
+    lines += section("accuracy scorecard (predicted vs observed)")
+    card = state.obs.scorecard.render_text()
+    lines += ["  " + ln for ln in card.splitlines()] if card.strip() else \
+        ["  (no probes yet)"]
+    return "\n".join(lines) + "\n"
+
+
+# The page: one self-contained HTML document, no external assets.  Colors
+# follow the repo-standard viz palette (validated light+dark categorical
+# slots; status colors never reused as series; text in ink tokens only).
+_PAGE = """<!DOCTYPE html>
+<html lang="en"><head><meta charset="utf-8">
+<meta name="viewport" content="width=device-width, initial-scale=1">
+<title>KLARAPTOR fleet observatory</title>
+<style>
+.viz-root {
+  color-scheme: light;
+  --surface-1: #fcfcfb; --page: #f9f9f7;
+  --ink-1: #0b0b0b; --ink-2: #52514e; --ink-muted: #898781;
+  --grid: #e1e0d9; --baseline: #c3c2b7;
+  --border: rgba(11,11,11,0.10);
+  --series-1: #2a78d6;
+  --status-good: #0ca30c; --status-warn: #fab219;
+  --status-critical: #d03b3b;
+}
+@media (prefers-color-scheme: dark) {
+  :root:where(:not([data-theme="light"])) .viz-root {
+    color-scheme: dark;
+    --surface-1: #1a1a19; --page: #0d0d0d;
+    --ink-1: #ffffff; --ink-2: #c3c2b7; --ink-muted: #898781;
+    --grid: #2c2c2a; --baseline: #383835;
+    --border: rgba(255,255,255,0.10);
+    --series-1: #3987e5;
+  }
+}
+:root[data-theme="dark"] .viz-root {
+  color-scheme: dark;
+  --surface-1: #1a1a19; --page: #0d0d0d;
+  --ink-1: #ffffff; --ink-2: #c3c2b7; --ink-muted: #898781;
+  --grid: #2c2c2a; --baseline: #383835;
+  --border: rgba(255,255,255,0.10);
+  --series-1: #3987e5;
+}
+body.viz-root { margin: 0; background: var(--page); color: var(--ink-1);
+  font: 14px/1.45 system-ui, -apple-system, "Segoe UI", sans-serif; }
+main { max-width: 1080px; margin: 0 auto; padding: 20px 16px 48px; }
+h1 { font-size: 18px; font-weight: 600; margin: 0 0 2px; }
+.sub { color: var(--ink-muted); font-size: 12px; margin-bottom: 16px; }
+.tiles { display: grid; grid-template-columns: repeat(auto-fit,
+  minmax(200px, 1fr)); gap: 12px; margin-bottom: 16px; }
+.tile { background: var(--surface-1); border: 1px solid var(--border);
+  border-radius: 8px; padding: 12px 14px 8px; }
+.tile .label { color: var(--ink-2); font-size: 12px; }
+.tile .value { font-size: 26px; font-weight: 600; margin: 2px 0 4px; }
+.tile svg { display: block; width: 100%; height: 36px; }
+.card { background: var(--surface-1); border: 1px solid var(--border);
+  border-radius: 8px; padding: 12px 14px; margin-bottom: 16px; }
+.card h2 { font-size: 13px; font-weight: 600; margin: 0 0 8px;
+  color: var(--ink-2); }
+table { border-collapse: collapse; width: 100%; font-size: 13px; }
+th { text-align: left; color: var(--ink-muted); font-weight: 500;
+  border-bottom: 1px solid var(--grid); padding: 4px 10px 4px 0; }
+td { border-bottom: 1px solid var(--grid); padding: 4px 10px 4px 0;
+  font-variant-numeric: tabular-nums; }
+tr:last-child td { border-bottom: none; }
+.ok { color: var(--status-good); }
+.breach { color: var(--status-critical); font-weight: 600; }
+.warn { color: var(--status-warn); }
+.muted { color: var(--ink-muted); }
+#tip { position: fixed; display: none; pointer-events: none;
+  background: var(--surface-1); border: 1px solid var(--border);
+  border-radius: 6px; padding: 3px 8px; font-size: 12px;
+  color: var(--ink-1); box-shadow: 0 2px 8px rgba(0,0,0,0.15); }
+</style></head>
+<body class="viz-root"><main>
+<h1>KLARAPTOR fleet observatory</h1>
+<div class="sub" id="sub">connecting&hellip;</div>
+<div class="tiles" id="tiles"></div>
+<div class="card"><h2>SLO burn-rate rules</h2>
+  <table id="slo"></table></div>
+<div class="card"><h2>Retune queue</h2><table id="queue"></table></div>
+<div class="card"><h2>Accuracy scorecard &mdash; observed/predicted per
+  (kernel, hw, bucket)</h2><table id="card"></table></div>
+<div id="tip"></div>
+<script>
+"use strict";
+const INTERVAL = __INTERVAL_MS__;
+const tip = document.getElementById("tip");
+
+function spark(values, width, height) {
+  // Single-series sparkline: 2px line in the slot-1 hue, recessive
+  // baseline, no legend (the tile label names the series).
+  const w = width || 220, h = height || 36, pad = 2;
+  const max = Math.max(...values, 1e-12);
+  const n = values.length;
+  const pts = values.map((v, i) => {
+    const x = pad + i * (w - 2 * pad) / Math.max(n - 1, 1);
+    const y = h - pad - (v / max) * (h - 2 * pad);
+    return x.toFixed(1) + "," + y.toFixed(1);
+  });
+  return '<svg viewBox="0 0 ' + w + ' ' + h + '" data-vals="'
+    + values.map(v => v.toPrecision(3)).join(",")
+    + '" preserveAspectRatio="none">'
+    + '<line x1="0" y1="' + (h - 1) + '" x2="' + w + '" y2="' + (h - 1)
+    + '" stroke="var(--baseline)" stroke-width="1"/>'
+    + '<polyline fill="none" stroke="var(--series-1)" stroke-width="2" '
+    + 'stroke-linejoin="round" points="' + pts.join(" ") + '"/></svg>';
+}
+
+document.addEventListener("mousemove", (e) => {
+  const svg = e.target.closest && e.target.closest("svg[data-vals]");
+  if (!svg) { tip.style.display = "none"; return; }
+  const vals = svg.dataset.vals.split(",").map(Number);
+  const r = svg.getBoundingClientRect();
+  const i = Math.min(vals.length - 1, Math.max(0, Math.round(
+    (e.clientX - r.left) / r.width * (vals.length - 1))));
+  const ago = (vals.length - 1 - i);
+  tip.textContent = vals[i].toPrecision(3) + "  (" + ago + " window"
+    + (ago === 1 ? "" : "s") + " ago)";
+  tip.style.left = (e.clientX + 12) + "px";
+  tip.style.top = (e.clientY - 28) + "px";
+  tip.style.display = "block";
+});
+
+function stateCell(state) {
+  // Icon + label, never color alone.
+  return state === "breach"
+    ? '<span class="breach">&#9650; BREACH</span>'
+    : '<span class="ok">&#9679; ok</span>';
+}
+
+function tile(label, value, series) {
+  return '<div class="tile"><div class="label">' + label + '</div>'
+    + '<div class="value">' + value + '</div>'
+    + (series ? spark(series) : "") + '</div>';
+}
+
+function pct(x) { return (100 * x).toFixed(2) + "%"; }
+
+async function refresh() {
+  if (document.hidden) return;
+  let s, ser, card;
+  try {
+    [s, ser, card] = await Promise.all([
+      fetch("/api/summary").then(r => r.json()),
+      fetch("/api/series").then(r => r.json()),
+      fetch("/api/scorecard").then(r => r.json())]);
+  } catch (err) {
+    document.getElementById("sub").textContent =
+      "disconnected - retrying";
+    return;
+  }
+  document.getElementById("sub").textContent =
+    s.n_events + " events - " + s.alerts_firing
+    + " rule(s) firing - window " + ser.window_s + "s - refreshed "
+    + new Date().toLocaleTimeString();
+  document.getElementById("tiles").innerHTML =
+    tile("Launch rate (/s)", s.launch_rate_1m.toFixed(2),
+         ser.launch_rate)
+    + tile("Fallback fraction", pct(s.fallback_frac_1m),
+           ser.fallback_frac)
+    + tile("Padding waste", pct(s.padding_waste_1m), ser.padding_waste)
+    + tile("Drift events", ser.drift_events.reduce((a, b) => a + b, 0),
+           ser.drift_events);
+  document.getElementById("slo").innerHTML =
+    "<tr><th>rule</th><th>objective</th><th>windows</th>"
+    + "<th>state</th><th>breached keys</th></tr>"
+    + s.slo.map(r => "<tr><td>" + r.slo
+      + (r.retune ? ' <span class="muted">&rarr; retune</span>' : "")
+      + "</td><td>" + r.objective + "</td><td>" + r.fast_window_s
+      + "s / " + r.slow_window_s + "s</td><td>" + stateCell(r.state)
+      + "</td><td>" + (r.keys.join("<br>") || "&mdash;")
+      + "</td></tr>").join("");
+  const q = s.queue;
+  document.getElementById("queue").innerHTML = q === null
+    ? '<tr><td class="muted">no retune queue attached</td></tr>'
+    : "<tr><th>pending</th><th>done</th><th>failed</th>"
+      + "<th>requeued</th><th>head of queue</th></tr>"
+      + "<tr><td>" + q.pending + "</td><td>" + q.done + "</td><td>"
+      + q.failed + "</td><td>" + q.requeued + "</td><td>"
+      + (s.queue_pending.map(p => p.key + " <span class='muted'>(p="
+         + p.priority.toPrecision(3) + ")</span>").join("<br>")
+         || "&mdash;") + "</td></tr>";
+  document.getElementById("card").innerHTML =
+    "<tr><th>kernel</th><th>hw</th><th>bucket</th><th>launches</th>"
+    + "<th>probes</th><th>ratio p50</th><th>p10..p90</th>"
+    + "<th>drift ewma</th><th>SLO</th></tr>"
+    + (card.rows.length === 0
+       ? '<tr><td colspan="9" class="muted">no probes yet</td></tr>'
+       : card.rows.map(r => {
+           const c = r.calibration;
+           const slo = r.within_slo === null
+             ? '<span class="muted">&mdash;</span>'
+             : stateCell(r.within_slo ? "ok" : "breach");
+           return "<tr><td>" + r.kernel + "</td><td>" + r.hw
+             + "</td><td>" + r.bucket + "</td><td>" + r.launches
+             + "</td><td>" + r.probes + "</td><td>"
+             + (c ? c.p50.toFixed(3) : "&mdash;") + "</td><td>"
+             + (c ? c.p10.toFixed(2) + ".." + c.p90.toFixed(2)
+                  : "&mdash;") + "</td><td>"
+             + (r.rel_error_ewma === null ? "&mdash;"
+                : r.rel_error_ewma.toFixed(3))
+             + "</td><td>" + slo + "</td></tr>";
+         }).join(""));
+}
+refresh();
+setInterval(refresh, INTERVAL);
+</script></main></body></html>
+"""
+
+
+def build_file_state(ledgers, queue_path=None, evaluate: bool = True,
+                     window_s: float = 1.0) -> DashState:
+    """File mode: replay history, then tail for new complete lines."""
+    queue = None
+    if queue_path:
+        from repro.fleet import RetuneQueue
+        queue = RetuneQueue(queue_path)
+    obs = Observatory(queue=queue, window_s=window_s)
+    tails = []
+    for path in ledgers:
+        tail = LedgerTail(path)
+        tails.append(tail)
+    state = DashState(obs, tails=tails, evaluate=evaluate)
+    state.refresh()        # replay everything already on disk
+    return state
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.dash",
+        description="Zero-dependency live observability dashboard over "
+                    "KLARAPTOR flight ledgers.")
+    ap.add_argument("--ledger", action="append", required=True,
+                    metavar="PATH",
+                    help="JSONL flight ledger to follow (repeatable for "
+                         "multi-process aggregation)")
+    ap.add_argument("--queue", metavar="PATH", default=None,
+                    help="RetuneQueue state file to display (and feed on "
+                         "SLO breaches)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8777)
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="page auto-refresh seconds (default 2)")
+    ap.add_argument("--no-slo", action="store_true",
+                    help="render only; do not evaluate SLO rules against "
+                         "the tailed events")
+    ap.add_argument("--once", action="store_true",
+                    help="print one terminal snapshot and exit (no HTTP)")
+    args = ap.parse_args(argv)
+
+    state = build_file_state(args.ledger, queue_path=args.queue,
+                             evaluate=not args.no_slo)
+    if args.once:
+        print(render_once(state), end="")
+        return 0
+    server = DashServer(state, host=args.host, port=args.port,
+                        interval_s=args.interval)
+    print(f"observatory dashboard on http://{server.host}:{server.port}/ "
+          f"(metrics at /metrics; ctrl-c to stop)")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

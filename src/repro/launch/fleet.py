@@ -171,10 +171,29 @@ def _cmd_status(args) -> int:
                 [[k, str(q.state["pending"][k]["n_seen"]),
                   f"{e.get('rel_error_ewma', 0.0):.3f}"]
                  for k, e in pend])
-    if not lines:
+    if not lines and not (args.dash and args.ledger):
         print("nothing to show (pass --spool and/or --state)")
         return 1
-    print("\n".join(lines))
+    if lines:
+        print("\n".join(lines))
+    if args.dash:
+        # One pane for serving + farm health: tail the serving ledgers
+        # into an observatory (with the retune queue attached, so SLO
+        # breaches surface here too) and serve the live dashboard.
+        if not args.ledger:
+            print("--dash needs at least one --ledger to follow")
+            return 1
+        from repro.launch.dash import DashServer, build_file_state
+        state = build_file_state(args.ledger, queue_path=args.state)
+        server = DashServer(state, port=args.dash)
+        print(f"observatory dashboard on "
+              f"http://{server.host}:{server.port}/ (ctrl-c to stop)")
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.shutdown()
     return 0
 
 
@@ -246,6 +265,12 @@ def main(argv=None) -> int:
     s = sub.add_parser("status", help="inspect a spool / retune queue")
     _add_common(s, spool_required=False)
     s.add_argument("--state", default=None)
+    s.add_argument("--dash", metavar="PORT", type=int, default=None,
+                   help="serve the live observatory dashboard on this "
+                        "port, tailing --ledger files (serving + farm "
+                        "health in one pane)")
+    s.add_argument("--ledger", action="append", metavar="PATH",
+                   help="with --dash: JSONL flight ledger(s) to follow")
     s.set_defaults(fn=_cmd_status)
 
     args = ap.parse_args(argv)

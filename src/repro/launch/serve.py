@@ -188,6 +188,10 @@ def main() -> None:
                     help="append the JSONL flight ledger (choices, probes, "
                          "drift, refits) here; implies --telemetry; replay "
                          "with python -m repro.launch.status --ledger PATH")
+    ap.add_argument("--dash", metavar="PORT", type=int, default=None,
+                    help="serve the live observatory dashboard (sparklines, "
+                         "SLO state, accuracy scorecard) on this port for "
+                         "the duration of the run; implies --telemetry")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -213,7 +217,8 @@ def main() -> None:
                   f"constraints {list(ak.spec.constraints)}, "
                   f"kernel hash {ak.spec.source_fingerprint}")
     telemetry = (build_telemetry(auto_kernels=auto, ledger=ledger)
-                 if args.telemetry or ledger is not None else None)
+                 if args.telemetry or ledger is not None
+                 or args.dash is not None else None)
     envelope = (default_plan_envelope(args.batch, args.max_seq)
                 if args.plans else None)
     buckets = (default_bucket_lattices(cfg, args.batch, args.max_seq)
@@ -238,6 +243,18 @@ def main() -> None:
         sp = engine._step_plan.describe()
         print(f"step plan: {sp['entries']} kernel configs frozen at "
               f"generation {sp['generation']} ({sp['sources']})")
+    observatory = dash = None
+    if args.dash is not None:
+        # After engine construction so the observatory finds the installed
+        # tracer (span sink) and the warm-start spans are already past.
+        from repro.launch.dash import DashServer, DashState
+        from repro.obs import Observatory
+        observatory = Observatory(telemetry=telemetry,
+                                  ledger=ledger).install()
+        dash = DashServer(DashState(observatory, evaluate=True),
+                          port=args.dash).serve_background()
+        print(f"observatory dashboard on http://{dash.host}:{dash.port}/ "
+              f"(metrics at /metrics)")
     for i in range(args.requests):
         prompt = [2 + (i * 7 + j) % (cfg.vocab_size - 3)
                   for j in range(4 + i % 4)]
@@ -257,6 +274,15 @@ def main() -> None:
         frac = bs["waste_sum"] / n if n else 0.0
         print(f"bucket dispatch: {bs['hits']} hits, {bs['misses']} misses "
               f"over {bs['steps']} steps, mean padding waste {frac:.3f}")
+    if observatory is not None:
+        alerts = observatory.evaluate()
+        firing = sorted({r for r, _ in observatory.slo.firing})
+        print(f"observatory: {observatory.bus.n_events} events ingested, "
+              f"{len(alerts)} alert transition(s) this tick, "
+              f"firing: {firing or 'none'}")
+        if dash is not None:
+            dash.shutdown()
+        observatory.uninstall()
     if telemetry is not None:
         if args.telemetry_json:
             with open(args.telemetry_json, "w") as f:

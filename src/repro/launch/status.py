@@ -1,6 +1,7 @@
 """Terminal status dashboard over the flight ledger / telemetry snapshot.
 
     python -m repro.launch.status --ledger run.jsonl
+    python -m repro.launch.status --ledger run.jsonl --follow
     python -m repro.launch.status --snapshot telemetry.json
 
 Renders what the tuning runtime decided and observed: per-kernel
@@ -9,6 +10,12 @@ default), prediction rel-error EWMAs, drift + refit history, and the top
 pipeline spans by cumulative time.  ``--ledger`` reads the JSONL flight
 ledger written by ``Telemetry(ledger=...)`` / ``serve --ledger``;
 ``--snapshot`` reads a ``MetricsExporter.json()`` dump.
+
+``--follow`` is the tail mode: after the initial render it polls the
+ledger's byte offset (the same complete-lines-only contract the fleet's
+retune queue uses) and prints each new decision / probe / drift / refit /
+alert as a one-line record the moment it lands -- watching a serving node
+live without the HTTP dashboard.
 """
 
 from __future__ import annotations
@@ -16,10 +23,12 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 
-from repro.trace import ledger_summary, read_ledger
+from repro.trace import LedgerTail, ledger_summary, read_ledger
 
-__all__ = ["main", "render_ledger", "render_snapshot", "section", "table"]
+__all__ = ["follow_ledger", "format_event", "main", "render_ledger",
+           "render_snapshot", "section", "table"]
 
 _RULE_WIDTH = 64
 
@@ -177,6 +186,71 @@ def render_snapshot(snap: dict, top: int = 10) -> str:
     return "\n".join(lines) + "\n"
 
 
+def format_event(ev: dict) -> str | None:
+    """One tail line per ledger event (None = not worth a line)."""
+    kind = ev.get("type")
+    if kind == "choice":
+        n = int(ev.get("n_coalesced") or 1)
+        coal = f" x{n}" if n > 1 else ""
+        return (f"choice  {ev.get('kernel')} source={ev.get('source')}"
+                f"{coal} predicted={_fmt_s(ev.get('predicted_s') or 0.0)}")
+    if kind == "probe":
+        ewma = ev.get("rel_error_ewma")
+        return (f"probe   {ev.get('kernel')} bucket={ev.get('bucket')} "
+                f"predicted={_fmt_s(ev.get('predicted_s') or 0.0)} "
+                f"observed={_fmt_s(ev.get('observed_s') or 0.0)} "
+                f"ewma={ewma:.3f}" if ewma is not None else
+                f"probe   {ev.get('kernel')} bucket={ev.get('bucket')}")
+    if kind == "drift":
+        return (f"drift   {ev.get('kernel')} bucket={ev.get('bucket')} "
+                f"ewma={ev.get('rel_error_ewma', 0.0):.3f}")
+    if kind == "refit":
+        status = "ok" if ev.get("succeeded") else "FAILED"
+        return (f"refit   {ev.get('kernel')} {status} "
+                f"version={ev.get('cache_version')} "
+                f"device_s={ev.get('total_device_seconds', 0.0):.4f}")
+    if kind == "alert":
+        key = ev.get("key")
+        where = " " + ",".join(f"{k}={v}" for k, v in sorted(key.items())) \
+            if key else ""
+        return (f"alert   {ev.get('slo')} {ev.get('state', '?').upper()}"
+                f"{where} value={ev.get('value', 0.0):.4f} "
+                f"objective={ev.get('objective', 0.0):g}")
+    if kind == "session":
+        return f"session pid={ev.get('pid')} (new ledger open)"
+    return None       # spans / bucket steps are too chatty for a tail
+
+
+def follow_ledger(path, interval_s: float = 1.0,
+                  max_seconds: float | None = None, out=None) -> int:
+    """Tail a flight ledger, printing one line per notable new event.
+
+    Polls byte offsets through ``LedgerTail`` (only complete lines are
+    consumed, torn writes are picked up whole on the next poll).  Runs
+    until interrupted, or for ``max_seconds`` if given; returns the
+    number of events seen.
+    """
+    out = out if out is not None else sys.stdout
+    tail = LedgerTail(path)
+    t0 = time.monotonic()
+    seen = 0
+    try:
+        while True:
+            for ev in tail.poll():
+                seen += 1
+                line = format_event(ev)
+                if line is not None:
+                    out.write(line + "\n")
+            out.flush()
+            if max_seconds is not None \
+                    and time.monotonic() - t0 >= max_seconds:
+                break
+            time.sleep(interval_s)
+    except KeyboardInterrupt:
+        pass
+    return seen
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.status",
@@ -190,13 +264,29 @@ def main(argv=None) -> int:
                      help="MetricsExporter.json() dump")
     ap.add_argument("--top", type=int, default=10,
                     help="span rows to show (default 10)")
+    ap.add_argument("--follow", action="store_true",
+                    help="with --ledger: after the summary, tail the file "
+                         "and print new events as they land (ctrl-c to "
+                         "stop)")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="with --follow: poll interval seconds (default 1)")
+    ap.add_argument("--max-seconds", type=float, default=None,
+                    help="with --follow: stop after this long (default: "
+                         "until interrupted)")
     args = ap.parse_args(argv)
+    if args.follow and not args.ledger:
+        ap.error("--follow requires --ledger")
     if args.ledger:
         out = render_ledger(read_ledger(args.ledger), top=args.top)
     else:
         with open(args.snapshot) as f:
             out = render_snapshot(json.load(f), top=args.top)
     sys.stdout.write(out)
+    if args.follow:
+        sys.stdout.write("\n== following (ctrl-c to stop) " + "=" * 33
+                         + "\n")
+        follow_ledger(args.ledger, interval_s=args.interval,
+                      max_seconds=args.max_seconds)
     return 0
 
 

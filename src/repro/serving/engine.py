@@ -404,7 +404,7 @@ class ServingEngine:
             self.bucket_stats["waste_sum"] += waste
             if self.telemetry is not None and \
                     hasattr(self.telemetry, "note_bucket_step"):
-                self.telemetry.note_bucket_step(hit, waste)
+                self.telemetry.note_bucket_step(hit, waste, kernel=kernel)
         self.bucket_stats["steps"] += 1
 
     def _refresh_step_plan(self) -> None:

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from typing import Iterable, Mapping
 
 import numpy as np
@@ -35,6 +36,7 @@ from repro.core.device_model import DeviceModel, V5E
 from repro.core.driver import ChoiceEvent, set_choice_listener
 from repro.core.kernel_spec import CandidateTable, KernelSpec
 from repro.core.tuner import Klaraptor
+from repro.obs.series import get_metrics_bus
 from repro.trace import Ledger, trace_span
 
 from .config import TelemetryConfig
@@ -115,7 +117,8 @@ class Telemetry:
         with self._lock:
             self.counters.warm_started_kernels += len(kernels)
 
-    def note_bucket_step(self, hit: bool, waste: float) -> None:
+    def note_bucket_step(self, hit: bool, waste: float,
+                         kernel: str | None = None) -> None:
         """One bucketed-dispatch outcome from a serving decode step: the
         engine's host replay of the in-graph bucket decision (bit-identical
         rounding, see core/buckets.py).  ``waste`` is the padding-waste
@@ -126,6 +129,27 @@ class Telemetry:
             else:
                 self.counters.bucket_misses += 1
             self.counters.bucket_padding_waste_sum += float(waste)
+        if self._emitting():
+            self._emit({"type": "bucket_step", "hit": bool(hit),
+                        "waste": float(waste), "kernel": kernel,
+                        "t_ns": time.monotonic_ns()})
+
+    # -- event emission ------------------------------------------------------
+    def _emitting(self) -> bool:
+        """Is any event sink (ledger or metrics bus) attached?  Gates
+        building the event dict at all -- with neither, the loop stays
+        counters-only."""
+        return self.ledger is not None or get_metrics_bus() is not None
+
+    def _emit(self, event: dict) -> None:
+        """One dict, both sinks: the JSONL line the ledger persists is the
+        exact object the live metrics bus ingests, which is what makes
+        offline ledger replay reproduce the live series bit-identically."""
+        if self.ledger is not None:
+            self.ledger.append(event)
+        bus = get_metrics_bus()
+        if bus is not None:
+            bus.ingest(event)
 
     # -- export --------------------------------------------------------------
     def snapshot(self) -> dict:
@@ -141,10 +165,10 @@ class Telemetry:
         # memo batches steady-state hits); counters account for all of
         # them, the shadow-probe sampling below sees one event.
         n = event.n_coalesced
-        if self.ledger is not None:
-            # One JSONL line per *event*, not per launch: the coalescing
+        if self._emitting():
+            # One event per *line*, not per launch: the coalescing
             # already happened upstream, so this inherits its write rate.
-            self.ledger.append({
+            self._emit({
                 "type": "choice", "kernel": event.kernel,
                 "hw": event.hw_name, "D": dict(event.D),
                 "config": dict(event.config), "source": event.source,
@@ -179,8 +203,8 @@ class Telemetry:
             if observed is None:
                 return
             self.recorder.record_probe(stats, event.predicted_s, observed)
-            if self.ledger is not None:
-                self.ledger.append({
+            if self._emitting():
+                self._emit({
                     "type": "probe", "kernel": event.kernel,
                     "hw": event.hw_name,
                     "bucket": bucket_label(stats.bucket),
@@ -197,8 +221,8 @@ class Telemetry:
             with self._lock:
                 self.counters.drift_events_total += 1
                 self.drift_events.append(drift)
-            if self.ledger is not None:
-                self.ledger.append({
+            if self._emitting():
+                self._emit({
                     "type": "drift", "kernel": drift.kernel,
                     "hw": drift.hw_name,
                     "bucket": bucket_label(drift.bucket),
@@ -207,6 +231,7 @@ class Telemetry:
                     "n_samples": drift.n_samples,
                     "predicted_s": drift.predicted_s,
                     "observed_s": drift.observed_s,
+                    "t_ns": event.t_ns,
                 })
             if self.config.refit_enabled:
                 self.refit_now(drift)
@@ -247,8 +272,8 @@ class Telemetry:
                 self.counters.overrides_total += 1
             self.counters.refit_device_seconds_total += \
                 result.total_device_seconds
-        if self.ledger is not None:
-            self.ledger.append({
+        if self._emitting():
+            self._emit({
                 "type": "refit", "kernel": result.kernel,
                 "D": dict(result.D), "succeeded": result.succeeded,
                 "cache_version": result.cache_version,
@@ -258,6 +283,7 @@ class Telemetry:
                 "total_executions": result.total_executions,
                 "wall_seconds": result.wall_seconds,
                 "error": result.error,
+                "t_ns": time.monotonic_ns(),
             })
         # The swapped-in fit starts with a clean record: the old fit's
         # errors must not immediately re-condemn the new one.

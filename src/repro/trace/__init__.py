@@ -12,7 +12,8 @@ instrument itself without import cycles.
 """
 
 from .chrome import chrome_trace, write_chrome_trace
-from .ledger import Ledger, ledger_summary, read_ledger
+from .ledger import (Ledger, LedgerTail, align_events, event_time_ns,
+                     iter_ledger, ledger_summary, merge_ledgers, read_ledger)
 from .span import (HISTOGRAM_BOUNDS_S, NULL_SPAN, Span, SpanHistogram,
                    Tracer, get_tracer, set_tracer, trace_span, traced,
                    tracing)
@@ -20,13 +21,18 @@ from .span import (HISTOGRAM_BOUNDS_S, NULL_SPAN, Span, SpanHistogram,
 __all__ = [
     "HISTOGRAM_BOUNDS_S",
     "Ledger",
+    "LedgerTail",
     "NULL_SPAN",
     "Span",
     "SpanHistogram",
     "Tracer",
+    "align_events",
     "chrome_trace",
+    "event_time_ns",
     "get_tracer",
+    "iter_ledger",
     "ledger_summary",
+    "merge_ledgers",
     "read_ledger",
     "set_tracer",
     "trace_span",

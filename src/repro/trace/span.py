@@ -143,8 +143,11 @@ class Span:
             h = hist[self.name] = SpanHistogram()
         h.add(dur_ns)
         led = tracer.ledger
-        if led is not None:
-            led.append({
+        sink = tracer.span_sink
+        if led is not None or sink is not None:
+            # One dict serves both consumers, so a live MetricsBus sees
+            # byte-identical events to what a ledger replay would read back.
+            ev = {
                 "type": "span",
                 "name": self.name,
                 "t0_ns": self.t0_ns,
@@ -152,7 +155,11 @@ class Span:
                 "thread": self.thread_name,
                 "depth": self.depth,
                 "attrs": self.attrs,
-            })
+            }
+            if led is not None:
+                led.append(ev)
+            if sink is not None:
+                sink(ev)
         return False
 
     def __repr__(self) -> str:
@@ -193,6 +200,9 @@ class Tracer:
     def __init__(self, capacity: int = 8192, ledger=None):
         self.capacity = int(capacity)
         self.ledger = ledger
+        # Optional callable fed the same span-event dict as the ledger
+        # line; the observatory (repro.obs) attaches its MetricsBus here.
+        self.span_sink = None
         self._ring: deque[Span] = deque(maxlen=max(self.capacity, 1))
         # Histograms are sharded per recording thread (each thread mutates
         # only its own dict, registered in ``_shards`` under ``_lock`` once

@@ -302,7 +302,7 @@ class TestLedger:
         s = ledger_summary(events)
         assert len(s["refits"]) == tel.counters.refits_total > 0
         # coalesced weighting: a synthetic n_coalesced choice counts fully
-        extra = dict(events[0])
+        extra = dict(next(e for e in events if e["type"] == "choice"))
         extra["n_coalesced"] = 64
         s2 = ledger_summary(events + [extra])
         assert s2["choices_total"] == s["choices_total"] + 64
@@ -330,9 +330,13 @@ class TestLedger:
                     with trace_span("b"):
                         pass
         events = read_ledger(path)
-        assert [(e["type"], e["name"], e["depth"]) for e in events] == \
-            [("span", "b", 1), ("span", "a", 0)]
-        assert events[1]["attrs"] == {"kernel": "mm"}
+        # every open writes one wall<->monotonic session anchor first
+        assert events[0]["type"] == "session"
+        assert {"wall_ns", "mono_ns", "pid"} <= set(events[0])
+        spans = [e for e in events if e["type"] == "span"]
+        assert [(e["name"], e["depth"]) for e in spans] == \
+            [("b", 1), ("a", 0)]
+        assert spans[1]["attrs"] == {"kernel": "mm"}
         assert ledger_summary(events)["spans"]["a"]["count"] == 1
 
 
